@@ -1,0 +1,73 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core.dataflows import Reuse, build_conv_program
+from repro.core.exeblock import ExeBlock, ExecutionGraph, Task
+from repro.core.isa import Instr, Op
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "benchmarks"
+
+
+def save(name: str, payload) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2,
+                                                     default=str))
+
+
+def fmt_table(rows: List[Dict], cols: List[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    line = "  ".join(c.ljust(widths[c]) for c in cols)
+    out = [line, "  ".join("-" * widths[c] for c in cols)]
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(widths[c])
+                             for c in cols))
+    return "\n".join(out)
+
+
+def _rename_block(b: ExeBlock, prefix: str) -> ExeBlock:
+    return ExeBlock(
+        name=prefix + b.name,
+        instrs=list(b.instrs),
+        logical_pe=b.logical_pe,
+        priority=b.priority,
+        successors=[prefix + s for s in b.successors],
+        sparse_execution=b.sparse_execution,
+        inst_dram_address=b.inst_dram_address,
+    )
+
+
+def merge_instances(graphs: List[ExecutionGraph]) -> ExecutionGraph:
+    """Run N program instances concurrently: merge task-k of every
+    instance into one task (paper §5.2.2 multi-instance execution)."""
+    n_tasks = max(len(g.tasks) for g in graphs)
+    tasks = []
+    for t in range(n_tasks):
+        blocks: List[ExeBlock] = []
+        ld_base = st_base = 0
+        repeats = 1
+        for i, g in enumerate(graphs):
+            if t < len(g.tasks):
+                src = g.tasks[t]
+                ld_base, st_base = src.ld_base, src.st_base
+                repeats = max(repeats, src.repeats)
+                blocks += [_rename_block(b, f"I{i}:") for b in src.blocks]
+        tasks.append(Task(task_id=t, blocks=blocks,
+                          ld_base=ld_base, st_base=st_base,
+                          repeats=repeats))
+    return ExecutionGraph(name=graphs[0].name + f"(x{len(graphs)})",
+                          tasks=tasks)
+
+
+def conv_instances(spec, scheme: Reuse, n_instances: int,
+                   **kw) -> ExecutionGraph:
+    """N concurrent instances.  ``repeats`` (paper §5.2: 'only one task
+    which loops itself multiple times') models steady state: instruction
+    images load once and data reuse spans iterations."""
+    graphs = [build_conv_program(spec, scheme, instance=i, **kw)
+              for i in range(n_instances)]
+    return merge_instances(graphs) if len(graphs) > 1 else graphs[0]

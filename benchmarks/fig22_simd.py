@@ -1,0 +1,39 @@
+"""Fig 22 — energy efficiency (nJ/op) of All-Reuse AlexNet_CONV2 as a
+function of SIMD width.  The per-instruction control energy is amortized
+over more lanes; the paper reports control at 0.8% of total by SIMD-64
+and calls SIMD-8 a reasonable design point."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dataflows import ALEXNET_CONV2, Reuse
+from repro.core.machine import MachineConfig, simulate
+
+from .common import conv_instances, fmt_table, save
+
+WIDTHS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run() -> dict:
+    rows = []
+    g = conv_instances(ALEXNET_CONV2, Reuse.ALL_REUSE, 1)
+    for w in WIDTHS:
+        cfg = dataclasses.replace(MachineConfig(), simd=w)
+        r = simulate(g, cfg)
+        ops = r.executed_cal_instrs * w * 2
+        ctrl_share = r.energy_breakdown["ctrl"] / r.energy_pj
+        rows.append({"simd": w,
+                     "nJ_per_op": f"{r.energy_pj / 1e3 / ops:.4f}",
+                     "ctrl_share": f"{ctrl_share * 100:.2f}%"})
+    print("\n== Fig 22: energy vs SIMD width (paper: ctrl -> 0.8% "
+          "@ SIMD-64) ==")
+    print(fmt_table(rows, ["simd", "nJ_per_op", "ctrl_share"]))
+    save("fig22_simd", rows)
+    nj = [float(r["nJ_per_op"]) for r in rows]
+    ctrl64 = float(rows[-1]["ctrl_share"].rstrip("%"))
+    return {"rows": rows, "monotone_decreasing": all(
+        a >= b for a, b in zip(nj, nj[1:])), "ctrl_share_simd64": ctrl64}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Fig 23 — energy-efficiency projection vs PE count.
+
+Per the paper: per-component energies stay constant as the array grows
+except the NoCs, whose hops-per-request grow ~ sqrt(#PEs).  We take the
+measured 64-PE energy breakdown of All-Reuse AlexNet_CONV2 and project.
+Paper: +23.1% total energy at 4096 PEs (so efficiency scales well)."""
+from __future__ import annotations
+
+import math
+
+from repro.core.dataflows import ALEXNET_CONV2, Reuse
+from repro.core.machine import MachineConfig, simulate
+
+from .common import conv_instances, fmt_table, save
+
+PES = (64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def run() -> dict:
+    cfg = MachineConfig()
+    r = simulate(conv_instances(ALEXNET_CONV2, Reuse.ALL_REUSE, 8), cfg)
+    e = r.energy_breakdown
+    e_noc = e["noc"]
+    e_rest = r.energy_pj - e_noc
+    rows = []
+    for n in PES:
+        scale = math.sqrt(n / 64)
+        total = e_rest + e_noc * scale
+        rows.append({"pes": n,
+                     "noc_scale": f"{scale:.2f}x",
+                     "energy_vs_64pe": f"{total / r.energy_pj:.3f}x"})
+    print("\n== Fig 23: energy projection vs #PEs (paper: 1.231x @ 4096) ==")
+    print(fmt_table(rows, ["pes", "noc_scale", "energy_vs_64pe"]))
+    save("fig23_scaling", rows)
+    at4096 = float(rows[-1]["energy_vs_64pe"].rstrip("x"))
+    return {"rows": rows, "overhead_at_4096": at4096 - 1.0,
+            "paper_target": 0.231}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Roofline summary: collate results/dryrun JSONs into the §Roofline
+table (all three terms, bottleneck, MODEL_FLOPS ratio, fit)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import fmt_table, save
+
+DRYRUN = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(tag: str = "baseline", mesh: str = "single"):
+    cells = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        if p.name == "skips.json":
+            continue
+        d = json.loads(p.read_text())
+        if d.get("tag", "baseline") != tag or d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def rows_for(cells):
+    rows = []
+    for d in cells:
+        r = d["roofline"]
+        la = d["loop_aware"]
+        m = d["memory"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "compute_s": f"{r['compute_s']:.4g}",
+            "memory_s": f"{r['memory_s']:.4g}",
+            "collective_s": f"{r['collective_s']:.4g}",
+            "bottleneck": r["bottleneck"],
+            "useful": f"{d['model_flops']['useful_ratio']:.2f}",
+            "mfrac": f"{r['model_fraction']:.3f}",
+            "GB/dev": f"{m['per_device_bytes'] / 1e9:.1f}",
+            "fits": m["fits"],
+        })
+    return rows
+
+
+def run(tag: str = "baseline") -> dict:
+    cells = load_cells(tag)
+    rows = rows_for(cells)
+    print(f"\n== Roofline table (single-pod, tag={tag}) ==")
+    print(fmt_table(rows, ["arch", "shape", "compute_s", "memory_s",
+                           "collective_s", "bottleneck", "useful",
+                           "mfrac", "GB/dev", "fits"]))
+    skips = DRYRUN / "skips.json"
+    if skips.exists():
+        for s in json.loads(skips.read_text()):
+            print(f"   [skipped] {s['arch']} x {s['shape']}: {s['reason']}")
+    save(f"roofline_{tag}", rows)
+    return {"rows": rows, "n_cells": len(rows)}
+
+
+if __name__ == "__main__":
+    import sys
+    run(sys.argv[1] if len(sys.argv) > 1 else "baseline")

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run           # everything
+    PYTHONPATH=src python -m benchmarks.run table6    # one benchmark
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig11_util, fig13_traffic, fig15_energy, fig19_sparse,
+               fig22_simd, fig23_scaling, kernel_dataflow, roofline,
+               table5_cisc, table6_static)
+
+BENCHES = {
+    "table5": table5_cisc.run,
+    "table6": table6_static.run,
+    "fig11": fig11_util.run,
+    "fig13": fig13_traffic.run,
+    "fig15": fig15_energy.run,
+    "fig19": fig19_sparse.run,
+    "fig22": fig22_simd.run,
+    "fig23": fig23_scaling.run,
+    "kernel": kernel_dataflow.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv):
+    names = argv or list(BENCHES)
+    summary = []
+    for name in names:
+        t0 = time.time()
+        try:
+            out = BENCHES[name]()
+            checks = {k: v for k, v in (out or {}).items()
+                      if isinstance(v, bool)}
+            ok = all(checks.values()) if checks else True
+            summary.append((name, "ok" if ok else "CHECK-FAILED",
+                            time.time() - t0, checks))
+        except Exception as e:                      # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            summary.append((name, f"ERROR: {e}", time.time() - t0, {}))
+    print("\n==================== summary ====================")
+    failed = 0
+    for name, status, dt, checks in summary:
+        flag = "" if status == "ok" else "  <<<<"
+        print(f"{name:10s} {status:14s} {dt:7.1f}s {checks}{flag}")
+        if status != "ok":
+            failed += 1
+    print(f"{len(summary) - failed}/{len(summary)} benchmarks clean")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

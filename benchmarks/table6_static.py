@@ -1,0 +1,37 @@
+"""Table 6 — static program analysis of the five CNN reuse schemes on
+AlexNet_CONV2 (LD/CAL/COPY/ST instruction and Operand-RAM counts)."""
+from __future__ import annotations
+
+from repro.core.dataflows import ALEXNET_CONV2, PAPER_TABLE6, Reuse, \
+    build_conv_program
+
+from .common import fmt_table, save
+
+
+def run() -> dict:
+    rows = []
+    for scheme in Reuse:
+        got = build_conv_program(ALEXNET_CONV2, scheme).totals()
+        want = PAPER_TABLE6[scheme]
+        rows.append({
+            "scheme": scheme.value,
+            **{k: got[k] for k in ("ld", "cal", "copy", "st",
+                                   "exeblocks", "opm_entries")},
+            **{f"{k}_paper": want[k] for k in ("ld", "cal", "copy", "st",
+                                               "exeblocks", "opm_entries")},
+        })
+    print("\n== Table 6: static analysis, AlexNet_CONV2 ==")
+    print(fmt_table(rows, ["scheme", "ld", "ld_paper", "cal", "cal_paper",
+                           "copy", "copy_paper", "st", "st_paper",
+                           "opm_entries", "opm_entries_paper"]))
+    exact = [r for r in rows if r["scheme"] in
+             ("no_reuse", "filter_reuse", "ifmap_reuse")]
+    all_exact = all(r[k] == r[f"{k}_paper"]
+                    for r in exact
+                    for k in ("ld", "cal", "copy", "st", "opm_entries"))
+    save("table6_static", rows)
+    return {"rows": rows, "no_filter_ifmap_exact": all_exact}
+
+
+if __name__ == "__main__":
+    run()

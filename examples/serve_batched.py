@@ -1,0 +1,46 @@
+"""Batched serving example: prefill a batch of prompts across all cache
+families (full KV, ring-buffer local attention, recurrent state), then
+decode — mirrors the decode_32k / long_500k dry-run shapes at CPU size.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import build_model
+from repro.serve.step import make_decode_step, make_prefill_step
+
+ARCHS = ["qwen3-0.6b",            # dense GQA: full KV cache
+         "recurrentgemma-2b",     # hybrid: ring buffer + RG-LRU state
+         "rwkv6-3b"]              # attention-free: O(1) state
+
+
+def main():
+    for name in ARCHS:
+        cfg = configs.get_smoke(name)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = SyntheticPipeline(cfg, batch=4, seq=48).device_batch(0)
+        prefill = jax.jit(make_prefill_step(model))
+        step = jax.jit(make_decode_step(model))
+        last, cache = prefill(params, batch)
+        tok = jax.numpy.argmax(last, -1).astype(jax.numpy.int32)[:, None]
+        t0 = time.time()
+        toks = [np.asarray(tok)]
+        for _ in range(15):
+            tok, cache = step(params, cache, tok)
+            toks.append(np.asarray(tok))
+        dt = time.time() - t0
+        state_bytes = sum(
+            v.size * v.dtype.itemsize for v in jax.tree.leaves(cache))
+        print(f"{name:20s} decoded 16 tok x 4 seqs in {dt * 1e3:6.0f} ms; "
+              f"cache/state = {state_bytes / 1e3:8.1f} kB; "
+              f"ids[0]={np.concatenate(toks, 1)[0][:6]}")
+
+
+if __name__ == "__main__":
+    main()

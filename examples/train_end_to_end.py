@@ -1,0 +1,86 @@
+"""End-to-end training driver (deliverable (b)): a ~100M-param decoder
+LM trained for a few hundred steps through the fault-tolerant runtime —
+checkpointing, restart and straggler accounting all active.
+
+The default invocation is sized for this CPU container (a ~10M model,
+60 steps, a couple of minutes).  The documented full run is the same
+command on real hardware:
+
+    PYTHONPATH=src python examples/train_end_to_end.py \
+        --scale 100m --steps 300 --batch 32 --seq 512
+
+Both scales exercise identical code paths.
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import build_model
+from repro.runtime import DriverConfig, TrainDriver
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+SCALES = {
+    # ~10M: CPU-friendly demo
+    "10m": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                d_ff=1024, vocab_size=8192),
+    # ~100M: the deliverable configuration
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab_size=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="10m", choices=list(SCALES))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--inject-fault-at", type=int, default=-1,
+                    help="crash once at this step to demo recovery")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"demo-{args.scale}", family="dense",
+                      qk_norm=True, tie_embeddings=True,
+                      **SCALES[args.scale])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(jax.numpy.size(p)) for p in jax.tree.leaves(params))
+    print(f"training {cfg.name}: {n / 1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    pipe = SyntheticPipeline(cfg, batch=args.batch, seq=args.seq)
+    step_fn = jax.jit(make_train_step(model, cfg,
+                                      opt=OptConfig(lr=6e-4,
+                                                    warmup_steps=20)))
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="e2e_ckpt_")
+
+    faults = {args.inject_fault_at} if args.inject_fault_at >= 0 else set()
+
+    def fault_hook(step):
+        if step in faults:
+            faults.discard(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+    driver = TrainDriver(
+        DriverConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                     ckpt_every=20, log_every=5),
+        step_fn, lambda s: pipe.device_batch(s), fault_hook=fault_hook)
+    params, opt = driver.run(params, init_opt_state(params))
+
+    first = driver.metrics_log[0]["loss"]
+    last = driver.metrics_log[-1]["loss"]
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    for e in driver.events:
+        print(f"  event: {e.kind} @ step {e.step} {e.info or ''}")
+    assert last < first, "training must reduce loss"
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,493 @@
+"""CNN dataflow program generators — the five reuse schemes of paper §5.2.
+
+Following the paper (which follows Eyeriss' taxonomy), a 2-D convolution
+is decomposed into *work items*: one work item = the partial sum of one
+(output position, output channel) pair over ONE input channel's kh x kw
+plane (K MADDs).  A task iteration processes a panel of
+``n_blocks x items_per_block`` work items (the paper's AlexNet_CONV2
+programs use 64 blocks x 4 items = 256 psum-updates; Table 6).
+
+Schemes and their work-item panels:
+
+* ``NO_REUSE``     — any panel; every item LDs its own weights/ifmap/psum.
+* ``FILTER_REUSE`` — 256 positions x 1 output channel: the single weight
+  plane is loaded once and multicast over a <=3-ary ExeBlock tree
+  (MAX_SUCCESSORS = 3 forces trees — this is why the paper's FLOW stage
+  matters).
+* ``IFMAP_REUSE``  — 1 position x 256 output channels: the single ifmap
+  patch is loaded once and multicast.
+* ``CONV_REUSE``   — 16 x 16 grid with a Task-Prepare; weight planes shared
+  within channel groups, ifmap shared *partially* via sliding-window
+  overlap along position chains (only the kh new rows are loaded).
+* ``ALL_REUSE``    — 16 x 16 grid with a Task-Prepare; both weight planes
+  and ifmap patches fully shared along both grid axes.
+
+Static-count ground truth (AlexNet_CONV2, Table 6) is asserted in
+``tests/test_dataflows.py``: No/Filter/Ifmap reproduce the paper's
+LD/CAL/COPY/ST/OPM counts **exactly**; Conv/All reproduce CAL/ST exactly
+and LD/COPY to the paper's ordering (the paper's exact multicast
+decomposition for those two is not published; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .exeblock import ExeBlock, ExecutionGraph, Task
+from .isa import Instr, Op, make_copy, make_ld, make_st
+
+__all__ = ["ConvSpec", "Reuse", "build_conv_program", "conv_reference",
+           "PAPER_TABLE6", "ALEXNET_CONV2"]
+
+
+class Reuse(enum.Enum):
+    NO_REUSE = "no_reuse"
+    CONV_REUSE = "conv_reuse"
+    FILTER_REUSE = "filter_reuse"
+    IFMAP_REUSE = "ifmap_reuse"
+    ALL_REUSE = "all_reuse"
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """One conv layer (single input-channel chunk per task)."""
+    name: str
+    in_ch: int
+    out_ch: int
+    kh: int
+    kw: int
+    ih: int          # padded input height (pad included by caller)
+    iw: int
+    stride: int = 1
+    batch: int = 8   # = SIMD width: one DRAM word carries 8 images
+
+    @property
+    def oh(self) -> int:
+        return (self.ih - self.kh) // self.stride + 1
+
+    @property
+    def ow(self) -> int:
+        return (self.iw - self.kw) // self.stride + 1
+
+    @property
+    def k(self) -> int:
+        return self.kh * self.kw
+
+
+#: AlexNet CONV2: 27x27x96 -> 27x27x256, 5x5 pad 2 (padded input 31x31)
+ALEXNET_CONV2 = ConvSpec("AlexNet_CONV2", in_ch=96, out_ch=256,
+                         kh=5, kw=5, ih=31, iw=31)
+
+#: paper Table 6 — static counts for AlexNet_CONV2 (per instance)
+PAPER_TABLE6: Dict[Reuse, Dict[str, int]] = {
+    Reuse.NO_REUSE: dict(ld=13056, cal=6400, copy=0, st=256,
+                         exeblocks=64, opm_entries=13056),
+    Reuse.CONV_REUSE: dict(ld=2976, cal=6400, copy=15200, st=256,
+                           exeblocks=256, opm_entries=13056),
+    Reuse.FILTER_REUSE: dict(ld=6681, cal=6400, copy=1575, st=256,
+                             exeblocks=120, opm_entries=8256),
+    Reuse.IFMAP_REUSE: dict(ld=6681, cal=6400, copy=1575, st=256,
+                            exeblocks=120, opm_entries=8256),
+    Reuse.ALL_REUSE: dict(ld=1136, cal=6400, copy=8400, st=256,
+                          exeblocks=254, opm_entries=8256),
+}
+
+
+# ---------------------------------------------------------------------------
+# DRAM layout (word addresses; one word = one SIMD vector over batch)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class _Layout:
+    spec: ConvSpec
+
+    def w(self, o: int, c: int, k: int) -> int:
+        s = self.spec
+        return (o * s.in_ch + c) * s.k + k
+
+    def x(self, c: int, y: int, xx: int) -> int:
+        s = self.spec
+        return s.out_ch * s.in_ch * s.k + (c * s.ih + y) * s.iw + xx
+
+    def p(self, o: int, pos: int) -> int:
+        s = self.spec
+        return (s.out_ch * s.in_ch * s.k + s.in_ch * s.ih * s.iw
+                + o * s.oh * s.ow + pos)
+
+    def patch_offsets(self, c: int, pos: int) -> List[int]:
+        s = self.spec
+        py, px = divmod(pos, s.ow)
+        return [self.x(c, py * s.stride + dy, px * s.stride + dx)
+                for dy in range(s.kh) for dx in range(s.kw)]
+
+    def patch_row_offsets(self, c: int, pos: int, dy: int) -> List[int]:
+        s = self.spec
+        py, px = divmod(pos, s.ow)
+        return [self.x(c, py * s.stride + dy, px * s.stride + dx)
+                for dx in range(s.kw)]
+
+
+class _PEAlloc:
+    """Per-logical-PE OPM bump allocator with shared-entry interning."""
+
+    def __init__(self) -> None:
+        self.next: Dict[int, int] = {}
+        self.interned: Dict[Tuple[int, object], int] = {}
+
+    def fresh(self, pe: int, n: int = 1) -> List[int]:
+        start = self.next.get(pe, 0)
+        self.next[pe] = start + n
+        return list(range(start, start + n))
+
+    def shared(self, pe: int, key: object, n: int = 1) -> Tuple[List[int], bool]:
+        """Addresses for a shared datum; returns (addrs, first_time)."""
+        k = (pe, key)
+        if k in self.interned:
+            return self.interned[k], False
+        addrs = self.fresh(pe, n)
+        self.interned[k] = addrs
+        return addrs, True
+
+
+def _madd_chain(w_addrs: Sequence[int], x_addrs: Sequence[int],
+                p_addr: int) -> List[Instr]:
+    return [Instr(Op.MADD, f0=w, f1=x, f2=p_addr)
+            for w, x in zip(w_addrs, x_addrs)]
+
+
+def _tree_children(n: int, arity: int = 3) -> Dict[int, List[int]]:
+    """Children of node i in a complete `arity`-ary tree over n nodes."""
+    return {i: [c for c in range(i * arity + 1, i * arity + 1 + arity)
+                if c < n] for i in range(n)}
+
+
+# ---------------------------------------------------------------------------
+# scheme builders
+# ---------------------------------------------------------------------------
+def _panel(spec: ConvSpec, scheme: Reuse, n_items: int,
+           instance: int) -> List[Tuple[int, int]]:
+    """Work-item panel [(out_channel, position)] for a scheme."""
+    npos_total = spec.oh * spec.ow
+    base_pos = (instance * n_items) % max(npos_total, 1)
+    if scheme is Reuse.FILTER_REUSE:
+        o = instance % spec.out_ch
+        return [(o, (base_pos + i) % npos_total) for i in range(n_items)]
+    if scheme is Reuse.IFMAP_REUSE:
+        pos = base_pos % npos_total
+        return [((instance + i) % spec.out_ch, pos) for i in range(n_items)]
+    side = int(math.isqrt(n_items))
+    assert side * side == n_items, "grid schemes need a square panel"
+    items = []
+    for ci in range(side):
+        for pi in range(side):
+            items.append((((instance * side) + ci) % spec.out_ch,
+                          (base_pos + pi) % npos_total))
+    if scheme in (Reuse.CONV_REUSE, Reuse.ALL_REUSE):
+        return items
+    # NO_REUSE: same grid panel (counts are panel-independent)
+    return items
+
+
+def build_conv_program(spec: ConvSpec, scheme: Reuse, *,
+                       n_pes: int = 64, items_per_block: int = 4,
+                       channel: int = 0, instance: int = 0,
+                       n_items: Optional[int] = None,
+                       repeats: int = 1) -> ExecutionGraph:
+    """Generate the ExecutionGraph of one task iteration of a scheme."""
+    n_items = n_items or n_pes * items_per_block
+    lay = _Layout(spec)
+    alloc = _PEAlloc()
+    items = _panel(spec, scheme, n_items, instance)
+    c = channel
+    pe_base = (instance * 17) % n_pes  # decorrelate instances across PEs
+
+    def pe_of(i: int) -> int:
+        return (pe_base + i) % n_pes
+
+    if scheme is Reuse.NO_REUSE:
+        tasks = [_build_no_reuse(spec, lay, alloc, items, c,
+                                 items_per_block, pe_of, instance, repeats)]
+    elif scheme is Reuse.FILTER_REUSE:
+        tasks = [_build_single_share(spec, lay, alloc, items, c,
+                                     items_per_block, pe_of, instance,
+                                     share="filter", repeats=repeats)]
+    elif scheme is Reuse.IFMAP_REUSE:
+        tasks = [_build_single_share(spec, lay, alloc, items, c,
+                                     items_per_block, pe_of, instance,
+                                     share="ifmap", repeats=repeats)]
+    elif scheme is Reuse.CONV_REUSE:
+        tasks = _build_grid(spec, lay, alloc, items, c, pe_of, instance,
+                            partial_ifmap=True, repeats=repeats)
+    else:
+        tasks = _build_grid(spec, lay, alloc, items, c, pe_of, instance,
+                            partial_ifmap=False, repeats=repeats)
+    return ExecutionGraph(name=f"{spec.name}:{scheme.value}:i{instance}",
+                          tasks=tasks)
+
+
+def _build_no_reuse(spec, lay, alloc, items, c, ipb, pe_of, instance,
+                    repeats) -> Task:
+    blocks = []
+    for bi in range(0, len(items), ipb):
+        pe = pe_of(bi // ipb)
+        ins: List[Instr] = []
+        cal: List[Instr] = []
+        st: List[Instr] = []
+        for (o, pos) in items[bi:bi + ipb]:
+            w = alloc.fresh(pe, spec.k)
+            x = alloc.fresh(pe, spec.k)
+            (p,) = alloc.fresh(pe, 1)
+            ins += [make_ld(a, lay.w(o, c, k)) for k, a in enumerate(w)]
+            ins += [make_ld(a, off)
+                    for a, off in zip(x, lay.patch_offsets(c, pos))]
+            ins.append(make_ld(p, lay.p(o, pos)))
+            cal += _madd_chain(w, x, p)
+            st.append(make_st(p, lay.p(o, pos)))
+        blocks.append(ExeBlock(name=f"nr{instance}_b{bi // ipb}",
+                               instrs=ins + cal + st, logical_pe=pe))
+    return Task(task_id=instance * 10, blocks=blocks, repeats=repeats)
+
+
+def _build_single_share(spec, lay, alloc, items, c, ipb, pe_of, instance,
+                        share: str, repeats: int) -> Task:
+    """Filter- or Ifmap-Reuse: one shared datum multicast over a 3-ary
+    tree embedded in the compute blocks themselves."""
+    n_blocks = len(items) // ipb
+    children = _tree_children(n_blocks)
+    if share == "filter":
+        o0 = items[0][0]
+        shared_offs = [lay.w(o0, c, k) for k in range(spec.k)]
+    else:
+        pos0 = items[0][1]
+        shared_offs = lay.patch_offsets(c, pos0)
+
+    # every block keeps the shared datum at the same OPM logical address
+    shared_addr: Dict[int, List[int]] = {}
+    for b in range(n_blocks):
+        pe = pe_of(b)
+        addrs, _ = alloc.shared(pe, ("shared", share, instance), spec.k)
+        shared_addr[b] = addrs
+
+    blocks = []
+    for b in range(n_blocks):
+        pe = pe_of(b)
+        ins: List[Instr] = []
+        cal: List[Instr] = []
+        flow: List[Instr] = []
+        st: List[Instr] = []
+        if b == 0:  # root loads the shared datum
+            ins += [make_ld(a, off)
+                    for a, off in zip(shared_addr[0], shared_offs)]
+        for (o, pos) in items[b * ipb:(b + 1) * ipb]:
+            if share == "filter":
+                x = alloc.fresh(pe, spec.k)
+                ins += [make_ld(a, off)
+                        for a, off in zip(x, lay.patch_offsets(c, pos))]
+                w = shared_addr[b]
+            else:
+                w = alloc.fresh(pe, spec.k)
+                ins += [make_ld(a, lay.w(o, c, k)) for k, a in enumerate(w)]
+                x = shared_addr[b]
+            (p,) = alloc.fresh(pe, 1)
+            ins.append(make_ld(p, lay.p(o, pos)))
+            cal += _madd_chain(w, x, p)
+            st.append(make_st(p, lay.p(o, pos)))
+        for ch in children[b]:
+            flow += [make_copy(src, dst, pe_of(ch))
+                     for src, dst in zip(shared_addr[b], shared_addr[ch])]
+        blocks.append(ExeBlock(
+            name=f"{share[0]}r{instance}_b{b}", instrs=ins + cal + flow + st,
+            logical_pe=pe,
+            successors=[f"{share[0]}r{instance}_b{ch}" for ch in children[b]]))
+    return Task(task_id=instance * 10 + 1, blocks=blocks, repeats=repeats)
+
+
+def _build_grid(spec, lay, alloc, items, c, pe_of, instance,
+                partial_ifmap: bool, repeats: int) -> List[Task]:
+    """Conv-Reuse (partial_ifmap=True) / All-Reuse grid schemes with a
+    Task-Prepare (paper Fig 10).
+
+    Grid: side x side items, rows = channel groups, cols = position chains.
+    Placement: item (ci, pi) -> PE (pi % 16) * 4 + (ci % 4) — channel
+    groups span 16 PEs, position groups span 4, so fully-shared multicasts
+    are copy-once-per-PE (Inter-ExeBlock reuse on co-resident blocks).
+    """
+    side = int(math.isqrt(len(items)))
+    tag = "cr" if partial_ifmap else "ar"
+    t_prep_blocks: List[ExeBlock] = []
+    t_main_blocks: List[ExeBlock] = []
+
+    def item_pe(ci: int, pi: int) -> int:
+        return pe_of((pi % 16) * 4 + (ci % 4))
+
+    # --- weight planes: one loader per channel group, multicast to the
+    # distinct PEs of the group (shared at the same logical address).
+    w_addr: Dict[Tuple[int, int], List[int]] = {}   # (ci, pe) -> addrs
+    for ci in range(side):
+        o = items[ci * side][0]
+        group_pes = []
+        for pi in range(side):
+            pe = item_pe(ci, pi)
+            if pe not in group_pes:
+                group_pes.append(pe)
+        loader_pe = group_pes[0]
+        addrs0, first = alloc.shared(loader_pe, ("w", ci, instance), spec.k)
+        w_addr[(ci, loader_pe)] = addrs0
+        ins = [make_ld(a, lay.w(o, c, k)) for k, a in enumerate(addrs0)] \
+            if first else []
+        flow: List[Instr] = []
+        for pe in group_pes[1:]:
+            dst, fresh = alloc.shared(pe, ("w", ci, instance), spec.k)
+            w_addr[(ci, pe)] = dst
+            if fresh:
+                flow += [make_copy(s, d, pe) for s, d in zip(addrs0, dst)]
+        t_prep_blocks.append(ExeBlock(name=f"{tag}{instance}_wload{ci}",
+                                      instrs=ins + flow,
+                                      logical_pe=loader_pe))
+
+    # --- ifmap: All-Reuse shares whole patches across channel groups;
+    # Conv-Reuse loads the first patch per (channel-group, chain) and the
+    # kh new rows for each subsequent position (sliding-window overlap).
+    x_addr: Dict[Tuple[int, int, int], List[int]] = {}  # (ci,pi,·)->addrs
+    if not partial_ifmap:
+        for pi in range(side):
+            pos = items[pi][1]
+            group_pes = []
+            for ci in range(side):
+                pe = item_pe(ci, pi)
+                if pe not in group_pes:
+                    group_pes.append(pe)
+            loader_pe = group_pes[0]
+            addrs0, first = alloc.shared(loader_pe, ("x", pi, instance),
+                                         spec.k)
+            ins = [make_ld(a, off) for a, off in
+                   zip(addrs0, lay.patch_offsets(c, items[pi][1]))] \
+                if first else []
+            flow = []
+            for pe in group_pes[1:]:
+                dst, fresh = alloc.shared(pe, ("x", pi, instance), spec.k)
+                if fresh:
+                    flow += [make_copy(s, d, pe) for s, d in zip(addrs0, dst)]
+            for ci in range(side):
+                pe = item_pe(ci, pi)
+                x_addr[(ci, pi, 0)], _ = alloc.shared(
+                    pe, ("x", pi, instance), spec.k)
+            t_prep_blocks.append(ExeBlock(name=f"{tag}{instance}_xload{pi}",
+                                          instrs=ins + flow,
+                                          logical_pe=loader_pe))
+
+    # --- main task: one block per work item
+    for ci in range(side):
+        for pi in range(side):
+            o, pos = items[ci * side + pi]
+            pe = item_pe(ci, pi)
+            ins: List[Instr] = []
+            flow: List[Instr] = []
+            succ: List[str] = []
+            w = w_addr[(ci, pe)]
+            if partial_ifmap:
+                # chain along positions: first block loads the full patch,
+                # later blocks receive the kh*(kw - stride... ) overlap rows
+                # from the predecessor and load only the new columns.
+                addrs, fresh = alloc.shared(pe, ("xc", ci, pi, instance),
+                                            spec.k)
+                if pi == 0:
+                    if fresh:
+                        ins += [make_ld(a, off) for a, off in
+                                zip(addrs, lay.patch_offsets(c, pos))]
+                else:
+                    # overlap: columns shift by `stride`; new cols per row
+                    new_per_row = min(spec.stride, spec.kw)
+                    for dy in range(spec.kh):
+                        row_offs = lay.patch_row_offsets(c, pos, dy)
+                        row_addrs = addrs[dy * spec.kw:(dy + 1) * spec.kw]
+                        ins += [make_ld(a, off) for a, off in
+                                zip(row_addrs[-new_per_row:],
+                                    row_offs[-new_per_row:])]
+                x = addrs
+                if pi + 1 < side:
+                    nxt_pe = item_pe(ci, pi + 1)
+                    nxt, _ = alloc.shared(nxt_pe, ("xc", ci, pi + 1,
+                                                   instance), spec.k)
+                    overlap = spec.k - spec.kh * min(spec.stride, spec.kw)
+                    # forward the overlapping entries (shifted by stride cols)
+                    for dy in range(spec.kh):
+                        for dx in range(spec.kw - spec.stride):
+                            src = addrs[dy * spec.kw + dx + spec.stride]
+                            dst = nxt[dy * spec.kw + dx]
+                            flow.append(make_copy(src, dst, nxt_pe))
+                    del overlap
+                    succ.append(f"{tag}{instance}_m{ci}_{pi + 1}")
+            else:
+                x = x_addr[(ci, pi, 0)]
+            (p,) = alloc.fresh(pe, 1)
+            ins.append(make_ld(p, lay.p(o, pos)))
+            cal = _madd_chain(w, x, p)
+            st = [make_st(p, lay.p(o, pos))]
+            t_main_blocks.append(ExeBlock(
+                name=f"{tag}{instance}_m{ci}_{pi}",
+                instrs=ins + cal + flow + st, logical_pe=pe,
+                successors=succ))
+
+    prep = Task(task_id=instance * 10 + 2, blocks=t_prep_blocks)
+    main = Task(task_id=instance * 10 + 3, blocks=t_main_blocks,
+                repeats=repeats)
+    return [prep, main]
+
+
+# ---------------------------------------------------------------------------
+# reference + DRAM seeding for functional validation
+# ---------------------------------------------------------------------------
+def seed_dram(state, spec: ConvSpec, weights: np.ndarray, ifmap: np.ndarray,
+              psums: Optional[np.ndarray] = None) -> None:
+    """Lay (out_ch,in_ch,kh,kw) weights, (in_ch,ih,iw,batch) ifmap and
+    optional (out_ch,oh*ow,batch) initial psums into interpreter DRAM."""
+    lay = _Layout(spec)
+    for o in range(spec.out_ch):
+        for c in range(spec.in_ch):
+            for k in range(spec.k):
+                dy, dx = divmod(k, spec.kw)
+                state.dram_write(lay.w(o, c, k),
+                                 np.broadcast_to(weights[o, c, dy, dx],
+                                                 (spec.batch,)))
+    for c in range(spec.in_ch):
+        for y in range(spec.ih):
+            for xx in range(spec.iw):
+                state.dram_write(lay.x(c, y, xx), ifmap[c, y, xx])
+    if psums is not None:
+        for o in range(spec.out_ch):
+            for pos in range(spec.oh * spec.ow):
+                state.dram_write(lay.p(o, pos), psums[o, pos])
+
+
+def read_psums(state, spec: ConvSpec,
+               items: Sequence[Tuple[int, int]]) -> np.ndarray:
+    lay = _Layout(spec)
+    return np.stack([state.dram_read(lay.p(o, pos)) for o, pos in items])
+
+
+def conv_reference(spec: ConvSpec, weights: np.ndarray, ifmap: np.ndarray,
+                   channel: int,
+                   items: Sequence[Tuple[int, int]],
+                   psums0: Optional[np.ndarray] = None) -> np.ndarray:
+    """Pure-numpy oracle: partial sums over one input channel."""
+    out = []
+    for o, pos in items:
+        py, px = divmod(pos, spec.ow)
+        acc = np.zeros(spec.batch, np.float32) if psums0 is None \
+            else psums0[o, pos].astype(np.float32).copy()
+        for dy in range(spec.kh):
+            for dx in range(spec.kw):
+                acc += (weights[o, channel, dy, dx]
+                        * ifmap[channel, py * spec.stride + dy,
+                                px * spec.stride + dx])
+        out.append(acc)
+    return np.stack(out)
+
+
+def panel_items(spec: ConvSpec, scheme: Reuse, *, n_items: int = 256,
+                instance: int = 0) -> List[Tuple[int, int]]:
+    return _panel(spec, scheme, n_items, instance)

@@ -1,0 +1,287 @@
+"""ExeBlock / Task / ExecutionGraph IR (paper §3.1, §3.4, §3.12).
+
+An *ExeBlock* is a straight-line program of RISC-NN instructions split into
+up to four consecutive stages (LD → CAL → FLOW → ST).  ExeBlocks form a
+dataflow DAG: at the end of its FLOW stage an ExeBlock *activates* its
+successors; a successor's CAL stage may start only once it has collected
+activations from all its predecessors (paper Fig 4).
+
+A *Task* groups ExeBlocks, owns the LD_Base / ST_Base DRAM base addresses,
+and is the unit the host enables.  An *Application* (``ExecutionGraph``)
+is a sequence of consecutive tasks (paper Fig 2).
+
+Addresses in this IR are *logical* until :mod:`repro.core.translator`
+maps them to physical PEs / Operand-RAM banks (paper §3.12).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+from .isa import Instr, Op, Stage
+
+__all__ = ["ExeBlock", "Task", "ExecutionGraph", "MAX_SUCCESSORS", "StagePCs"]
+
+#: paper §3.4: "each ExeBlock has up to 3 successors"
+MAX_SUCCESSORS = 3
+
+
+@dataclass(frozen=True)
+class StagePCs:
+    """Starting/ending PCs per stage. start == end means "stage absent"."""
+    start: tuple[int, int, int, int]
+    end: tuple[int, int, int, int]
+
+    def has(self, stage: Stage) -> bool:
+        return self.start[stage] != self.end[stage]
+
+    def range(self, stage: Stage) -> range:
+        return range(self.start[stage], self.end[stage])
+
+
+def _derive_stage_pcs(instrs: Sequence[Instr]) -> StagePCs:
+    """Partition a straight-line program into the 4 consecutive stages.
+
+    Raises if instructions are not in stage order (an ExeBlock's code is
+    "up to four consecutive Execution Stages", paper §3.1).
+    """
+    starts = [0, 0, 0, 0]
+    ends = [0, 0, 0, 0]
+    pc = 0
+    last_stage = -1
+    for ins in instrs:
+        st = int(ins.stage)
+        if st < last_stage:
+            raise ValueError(
+                f"instruction {pc} ({ins.op.name}) of stage {ins.stage.name} "
+                f"appears after stage {Stage(last_stage).name}"
+            )
+        if st != last_stage:
+            # close intermediate (absent) stages at the current pc
+            for s in range(last_stage + 1, st + 1):
+                starts[s] = pc
+            last_stage = st
+        pc += 1
+        ends[st] = pc
+    for s in range(last_stage + 1, 4):
+        starts[s] = ends[s] = pc
+    # absent stages between present ones: end = start
+    for s in range(4):
+        if ends[s] < starts[s]:
+            ends[s] = starts[s]
+    return StagePCs(start=tuple(starts), end=tuple(ends))
+
+
+@dataclass
+class ExeBlock:
+    """One ExeBlock (paper §3.4 'Initialization Step' fields).
+
+    ``logical_pe`` is the programmer-assigned logical PE id (paper §3.12);
+    the translator maps it to a physical PE.  ``sparse_execution`` marks
+    the block for Sparse-NN instruction skipping (paper §5.4); when set,
+    the owning :class:`Task` supplies a sparse vector and
+    :meth:`apply_sparse_vector` rewrites the per-instruction
+    ``sparse_pc_inc`` fields exactly the way the Instruction Loader does.
+    """
+    name: str
+    instrs: list[Instr]
+    logical_pe: int = 0
+    priority: int = 0
+    successors: list[str] = field(default_factory=list)
+    sparse_execution: bool = False
+    #: starting DRAM address of this block's instruction image
+    inst_dram_address: int = 0
+
+    def __post_init__(self) -> None:
+        if len(self.successors) > MAX_SUCCESSORS:
+            raise ValueError(
+                f"ExeBlock {self.name!r}: {len(self.successors)} successors "
+                f"(max {MAX_SUCCESSORS}, paper §3.4)"
+            )
+        if len(set(self.successors)) != len(self.successors):
+            raise ValueError(f"ExeBlock {self.name!r}: duplicate successors")
+        self.stage_pcs = _derive_stage_pcs(self.instrs)
+
+    # -- static program properties (Table 5/6 columns) ---------------------
+    def count(self, *ops: Op) -> int:
+        return sum(1 for i in self.instrs if i.op in ops)
+
+    @property
+    def n_ld(self) -> int:
+        return self.count(Op.LD)
+
+    @property
+    def n_cal(self) -> int:
+        return sum(1 for i in self.instrs if i.stage is Stage.CAL)
+
+    @property
+    def n_copy(self) -> int:
+        return self.count(Op.COPY)
+
+    @property
+    def n_st(self) -> int:
+        return self.count(Op.ST)
+
+    def opm_entries(self) -> set[int]:
+        """Set of Operand-RAM entries this block touches (logical addrs)."""
+        touched: set[int] = set()
+        for ins in self.instrs:
+            if ins.op is Op.LD:
+                touched.add(ins.f0)
+            elif ins.op is Op.ST:
+                touched.add(ins.f0)
+            elif ins.op is Op.COPY:
+                touched.add(ins.f0)  # source side; dest counts on remote PE
+            elif ins.op is Op.PREREAD0:
+                touched.add(ins.f0)
+            elif ins.op is Op.PREREAD1:
+                touched.add(ins.f1)
+            elif ins.stage is Stage.CAL:
+                touched.update((ins.f0, ins.f1, ins.f2))
+        return touched
+
+    # -- sparse execution ---------------------------------------------------
+    def apply_sparse_vector(self, valid: Sequence[bool]) -> None:
+        """Instruction-Loader semantics (paper §3.4 'Sparse PC Inc Update').
+
+        ``valid`` has one bit per instruction.  For each *valid* instruction
+        we write the PC increment to the next valid instruction.  The first
+        instruction of a sparse block must be valid (hardware fetches PC 0);
+        the translator guarantees this by construction for generated
+        programs (CAL chains start with a loader-kept anchor).
+        """
+        if len(valid) != len(self.instrs):
+            raise ValueError(
+                f"sparse vector length {len(valid)} != "
+                f"instruction count {len(self.instrs)}"
+            )
+        if self.instrs and not valid[0]:
+            raise ValueError("first instruction of a sparse ExeBlock must be valid")
+        self.sparse_execution = True
+        n = len(self.instrs)
+        out: list[Instr] = []
+        for pc, ins in enumerate(self.instrs):
+            nxt = pc + 1
+            while nxt < n and not valid[nxt]:
+                nxt += 1
+            inc = min(nxt - pc, 0xFF)
+            out.append(ins.with_sparse_inc(inc))
+        self.instrs = out
+        self.stage_pcs = _derive_stage_pcs(self.instrs)
+        self._sparse_valid = list(valid)
+
+    def executed_pcs(self) -> list[int]:
+        """PCs actually executed, honouring sparse skipping (per stage)."""
+        pcs: list[int] = []
+        for stage in Stage:
+            rng = self.stage_pcs.range(stage)
+            if not rng:
+                continue
+            pc = rng.start
+            # in sparse mode the stage's first instruction might itself be
+            # skipped; the loader marks that by the *previous stage's* tail
+            # inc jumping over it.  We model per-stage entry conservatively:
+            if self.sparse_execution:
+                valid = getattr(self, "_sparse_valid", [True] * len(self.instrs))
+                while pc < rng.stop and not valid[pc]:
+                    pc += 1
+            while pc < rng.stop:
+                pcs.append(pc)
+                pc += self.instrs[pc].sparse_pc_inc if self.sparse_execution else 1
+        return pcs
+
+
+@dataclass
+class Task:
+    """A task: ExeBlocks + DRAM base addresses (paper Fig 2, §3.11)."""
+    task_id: int
+    blocks: list[ExeBlock]
+    ld_base: int = 0
+    st_base: int = 0
+    #: how many times the task re-enables itself (ExeBlock Reuse, §3.11)
+    repeats: int = 1
+
+    def __post_init__(self) -> None:
+        names = [b.name for b in self.blocks]
+        if len(set(names)) != len(names):
+            raise ValueError(f"task {self.task_id}: duplicate ExeBlock names")
+        known = set(names)
+        for b in self.blocks:
+            for s in b.successors:
+                if s not in known:
+                    raise ValueError(
+                        f"task {self.task_id}: {b.name!r} -> unknown successor {s!r}"
+                    )
+        self._by_name = {b.name: b for b in self.blocks}
+
+    def block(self, name: str) -> ExeBlock:
+        return self._by_name[name]
+
+    def predecessors(self) -> dict[str, list[str]]:
+        preds: dict[str, list[str]] = {b.name: [] for b in self.blocks}
+        for b in self.blocks:
+            for s in b.successors:
+                preds[s].append(b.name)
+        return preds
+
+    def topo_order(self) -> list[ExeBlock]:
+        """Kahn topological order; raises on cycles (dataflow must be a DAG)."""
+        preds = self.predecessors()
+        indeg = {n: len(p) for n, p in preds.items()}
+        ready = sorted([n for n, d in indeg.items() if d == 0])
+        order: list[str] = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for s in self._by_name[n].successors:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+        if len(order) != len(self.blocks):
+            raise ValueError(f"task {self.task_id}: ExeBlock graph has a cycle")
+        return [self._by_name[n] for n in order]
+
+    # -- static totals (Table 5/6 rows) -------------------------------------
+    def opm_entry_set(self) -> set[tuple[int, int]]:
+        opm: set[tuple[int, int]] = set()
+        for b in self.blocks:
+            opm.update((b.logical_pe, a) for a in b.opm_entries())
+            for ins in b.instrs:
+                if ins.op is Op.COPY:
+                    opm.add((ins.f2, ins.f1))  # dest-side entry
+        return opm
+
+    def totals(self) -> dict[str, int]:
+        return {
+            "ld": sum(b.n_ld for b in self.blocks),
+            "cal": sum(b.n_cal for b in self.blocks),
+            "copy": sum(b.n_copy for b in self.blocks),
+            "st": sum(b.n_st for b in self.blocks),
+            "exeblocks": len(self.blocks),
+            "opm_entries": len(self.opm_entry_set()),
+        }
+
+
+@dataclass
+class ExecutionGraph:
+    """An application: a sequence of consecutive tasks (paper Fig 2)."""
+    name: str
+    tasks: list[Task]
+
+    def totals(self) -> dict[str, int]:
+        agg = {"ld": 0, "cal": 0, "copy": 0, "st": 0, "exeblocks": 0}
+        opm: set[tuple[int, int]] = set()
+        for t in self.tasks:
+            for k, v in t.totals().items():
+                if k != "opm_entries":
+                    agg[k] += v
+            # physical entries are shared across tasks (Inter-Task Data
+            # Reuse, paper §3.11) — count the union, not the sum
+            opm |= t.opm_entry_set()
+        agg["opm_entries"] = len(opm)
+        return agg
+
+    def all_blocks(self) -> Iterable[tuple[Task, ExeBlock]]:
+        for t in self.tasks:
+            for b in t.blocks:
+                yield t, b

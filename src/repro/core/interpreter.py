@@ -1,0 +1,199 @@
+"""Functional oracle for RISC-NN programs.
+
+Executes an :class:`~repro.core.exeblock.ExecutionGraph` with exact ISA
+semantics — including PREREAD operand-capture, result forwarding and
+sparse-PC-inc skipping — over a numpy machine state.  This is the
+reference against which the Pallas kernels, the performance model and
+the generated dataflow programs are validated.
+
+Scheduling semantics: blocks run in dataflow (topological) order, ties
+broken by (priority desc, name).  Within a block, stages run in order
+LD → CAL → FLOW → ST.  This sequentialisation is a *refinement* of the
+hardware's overlapped schedule: the activation protocol (paper Fig 4)
+guarantees any overlapped execution computes the same values, which is
+property-tested in ``tests/test_core_interpreter.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import lut
+from .exeblock import ExecutionGraph, ExeBlock, Task
+from .isa import Instr, Op, SIMD_WIDTH, Stage
+
+__all__ = ["MachineState", "run_graph", "run_block"]
+
+
+@dataclass
+class _PEState:
+    """Architectural state of one PE (paper Fig 3/7)."""
+    opm: np.ndarray  # (entries, simd) float32
+    # PREREAD capture registers (addr, data); one-time use (paper §3.7)
+    preread_addr: list = field(default_factory=lambda: [None, None])
+    preread_data: list = field(default_factory=lambda: [None, None])
+    # previous-cycle result forwarding (paper §3.7)
+    result_addr: Optional[int] = None
+    result_data: Optional[np.ndarray] = None
+
+
+@dataclass
+class MachineState:
+    """DRAM + the PE array.  DRAM is word-addressed; one word = one SIMD
+    vector (the 128-bit datapath of Table 2 moves SIMD-8 x 16-bit)."""
+    n_pes: int = 64
+    simd: int = SIMD_WIDTH
+    opm_entries: int = 2048
+    dram: Dict[int, np.ndarray] = field(default_factory=dict)
+    pes: list = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.pes:
+            self.pes = [
+                _PEState(opm=np.zeros((self.opm_entries, self.simd), np.float32))
+                for _ in range(self.n_pes)
+            ]
+
+    # -- DRAM helpers --------------------------------------------------------
+    def dram_read(self, addr: int) -> np.ndarray:
+        v = self.dram.get(addr)
+        if v is None:
+            v = np.zeros(self.simd, np.float32)
+        return v
+
+    def dram_write(self, addr: int, value: np.ndarray) -> None:
+        self.dram[addr] = np.asarray(value, np.float32).copy()
+
+    def dram_write_array(self, base: int, arr: np.ndarray) -> None:
+        """Lay a (n, simd) array into DRAM words base..base+n-1."""
+        arr = np.asarray(arr, np.float32).reshape(-1, self.simd)
+        for i, row in enumerate(arr):
+            self.dram[base + i] = row.copy()
+
+    def dram_read_array(self, base: int, n: int) -> np.ndarray:
+        return np.stack([self.dram_read(base + i) for i in range(n)])
+
+
+def _read_operand(pe: _PEState, port: int, addr: int) -> np.ndarray:
+    """READ-stage operand fetch with PREREAD bypass (paper §3.7).
+
+    If the operand address matches the port's PreRead Addr Reg the captured
+    data is used and the register pair is invalidated (one-time use).
+    """
+    if port in (0, 1) and pe.preread_addr[port] == addr:
+        data = pe.preread_data[port]
+        pe.preread_addr[port] = None
+        pe.preread_data[port] = None
+        return data
+    return pe.opm[addr].copy()
+
+
+def _forwarded(pe: _PEState, addr: int, value: np.ndarray) -> np.ndarray:
+    """EXE-stage RAW forwarding: if the operand address equals the previous
+    instruction's result address, use the Result Data Reg (paper §3.7)."""
+    if pe.result_addr == addr and pe.result_data is not None:
+        return pe.result_data
+    return value
+
+
+_ARITH = {
+    Op.ADD: lambda a, b, c: a + b,
+    Op.SUB: lambda a, b, c: a - b,
+    Op.MUL: lambda a, b, c: a * b,
+    Op.MAX: lambda a, b, c: np.maximum(a, b),
+    Op.MIN: lambda a, b, c: np.minimum(a, b),
+    Op.MADD: lambda a, b, c: a * b + c,
+}
+
+
+def _exec_instr(state: MachineState, pe_id: int, ins: Instr,
+                ld_base: int, st_base: int) -> None:
+    pe = state.pes[pe_id]
+    op = ins.op
+    if op is Op.LD:
+        pe.opm[ins.f0] = state.dram_read(ld_base + ((ins.f1 << 16) | ins.f2))
+    elif op is Op.ST:
+        val = pe.opm[ins.f0]
+        val = lut.apply_lookup(ins.lookup_type, val)
+        state.dram_write(st_base + ((ins.f1 << 16) | ins.f2), val)
+    elif op is Op.COPY:
+        state.pes[ins.f2].opm[ins.f1] = pe.opm[ins.f0].copy()
+    elif op is Op.PREREAD0:
+        pe.preread_addr[0] = ins.f0
+        pe.preread_data[0] = pe.opm[ins.f0].copy()
+    elif op is Op.PREREAD1:
+        pe.preread_addr[1] = ins.f1
+        pe.preread_data[1] = pe.opm[ins.f1].copy()
+    else:  # six arithmetic CAL ops
+        a = _forwarded(pe, ins.f0, _read_operand(pe, 0, ins.f0))
+        b = _forwarded(pe, ins.f1, _read_operand(pe, 1, ins.f1))
+        c = _forwarded(pe, ins.f2, _read_operand(pe, 2, ins.f2))
+        res = _ARITH[op](a, b, c).astype(np.float32)
+        pe.opm[ins.f2] = res
+        pe.result_addr = ins.f2
+        pe.result_data = res.copy()
+
+
+def run_block(state: MachineState, block: ExeBlock, *,
+              ld_base: int = 0, st_base: int = 0,
+              pe_map: Optional[dict] = None) -> None:
+    """Execute one ExeBlock's stages in order on its (mapped) PE."""
+    pe_id = (pe_map or {}).get(block.logical_pe, block.logical_pe)
+    pe = state.pes[pe_id]
+    # forwarding / preread registers do not survive across blocks: the CAL
+    # unit is re-armed per ExeBlock (control unit resets at Reset Step).
+    pe.result_addr = None
+    pe.result_data = None
+    pe.preread_addr = [None, None]
+    pe.preread_data = [None, None]
+    for pc in block.executed_pcs():
+        ins = block.instrs[pc]
+        if ins.op is Op.COPY and pe_map is not None:
+            ins = Instr(Op.COPY, f0=ins.f0, f1=ins.f1,
+                        f2=pe_map.get(ins.f2, ins.f2),
+                        sparse_pc_inc=ins.sparse_pc_inc)
+        _exec_instr(state, pe_id, ins, ld_base, st_base)
+
+
+def _schedule(task: Task) -> list[ExeBlock]:
+    """Dataflow order with deterministic tie-break (priority desc, name)."""
+    preds = task.predecessors()
+    indeg = {n: len(p) for n, p in preds.items()}
+    ready = sorted(
+        (b for b in task.blocks if indeg[b.name] == 0),
+        key=lambda b: (-b.priority, b.name),
+    )
+    order: list[ExeBlock] = []
+    while ready:
+        b = ready.pop(0)
+        order.append(b)
+        for s in b.successors:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                nb = task.block(s)
+                # insert keeping (priority desc, name) order
+                i = 0
+                while i < len(ready) and (-ready[i].priority, ready[i].name) <= (
+                        -nb.priority, nb.name):
+                    i += 1
+                ready.insert(i, nb)
+    if len(order) != len(task.blocks):
+        raise ValueError(f"task {task.task_id}: dataflow graph has a cycle")
+    return order
+
+
+def run_graph(graph: ExecutionGraph, state: Optional[MachineState] = None, *,
+              pe_map: Optional[dict] = None,
+              n_pes: int = 64) -> MachineState:
+    """Execute a whole application; returns the final machine state."""
+    if state is None:
+        state = MachineState(n_pes=n_pes)
+    for task in graph.tasks:
+        order = _schedule(task)
+        for _ in range(task.repeats):
+            for block in order:
+                run_block(state, block, ld_base=task.ld_base,
+                          st_base=task.st_base, pe_map=pe_map)
+    return state

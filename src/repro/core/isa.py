@@ -1,0 +1,176 @@
+"""Very-RISC ISA of RISC-NN (paper Table 1, Section 3.2).
+
+11 fixed-length (64-bit) instructions, all with the same format::
+
+    [ OP(4b) | F0(16b) | F1(16b) | F2(16b) | CTRL(12b) ]
+
+CTRL = [ Sparse PC Inc (8b) | In-DRAM Lookup Type (4b) ].
+
+Two addressing modes:
+  * Direct PE addressing   — a 16-bit absolute address into the PE's
+    Operand RAM Module (OPM).  COPY uses F2 as a remote PE number.
+  * Base-plus-offset DRAM  — DRAM address = task base (LD_Base / ST_Base)
+    + the 32-bit offset {F1,F2} ({hi,lo} concatenation).
+
+Each instruction belongs to exactly one ExeBlock execution stage
+(LD / CAL / FLOW / ST).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, replace
+
+__all__ = [
+    "Op", "Stage", "Instr", "OP_STAGE", "CAL_OPS", "ARITH_OPS",
+    "encode", "decode", "dram_offset", "make_ld", "make_st", "make_copy",
+    "WORD_BITS", "FIELD_BITS", "OPM_ENTRIES", "SIMD_WIDTH",
+]
+
+WORD_BITS = 64
+FIELD_BITS = 16
+#: Operand RAM Module capacity, entries (16 banks x 128 rows, Table 2).
+OPM_ENTRIES = 16 * 128
+#: default SIMD width (Table 2: SIMD-8)
+SIMD_WIDTH = 8
+
+
+class Op(enum.IntEnum):
+    """4-bit opcode. Exactly the paper's 11 instructions."""
+    LD = 0
+    ADD = 1
+    SUB = 2
+    MUL = 3
+    MAX = 4
+    MIN = 5
+    MADD = 6
+    PREREAD0 = 7
+    PREREAD1 = 8
+    COPY = 9
+    ST = 10
+
+
+class Stage(enum.IntEnum):
+    """ExeBlock execution stages, in mandatory order (paper §3.1)."""
+    LD = 0
+    CAL = 1
+    FLOW = 2
+    ST = 3
+
+
+OP_STAGE: dict[Op, Stage] = {
+    Op.LD: Stage.LD,
+    Op.ADD: Stage.CAL, Op.SUB: Stage.CAL, Op.MUL: Stage.CAL,
+    Op.MAX: Stage.CAL, Op.MIN: Stage.CAL, Op.MADD: Stage.CAL,
+    Op.PREREAD0: Stage.CAL, Op.PREREAD1: Stage.CAL,
+    Op.COPY: Stage.FLOW,
+    Op.ST: Stage.ST,
+}
+
+#: CAL-stage opcodes (8 of them, paper §3.2)
+CAL_OPS = tuple(op for op, st in OP_STAGE.items() if st is Stage.CAL)
+#: the six calculation-style CAL ops (everything but the PREREADs)
+ARITH_OPS = (Op.ADD, Op.SUB, Op.MUL, Op.MAX, Op.MIN, Op.MADD)
+
+_F_MASK = (1 << FIELD_BITS) - 1
+
+
+@dataclass(frozen=True)
+class Instr:
+    """One RISC-NN instruction.
+
+    ``sparse_pc_inc`` is the 8-bit *Sparse PC Inc* CTRL sub-field: the PC
+    increment to the next valid instruction when the owning ExeBlock runs
+    in sparse mode (paper §3.4, §5.4).  ``lookup_type`` is the 4-bit
+    *In-DRAM Lookup Type* sub-field used by ST for complex activation /
+    classifier functions (paper §3.9); 0 means "plain store".
+    """
+    op: Op
+    f0: int = 0
+    f1: int = 0
+    f2: int = 0
+    sparse_pc_inc: int = 1
+    lookup_type: int = 0
+
+    def __post_init__(self) -> None:
+        for name in ("f0", "f1", "f2"):
+            v = getattr(self, name)
+            if not 0 <= v <= _F_MASK:
+                raise ValueError(f"{name}={v} out of 16-bit range")
+        if not 0 <= self.sparse_pc_inc <= 0xFF:
+            raise ValueError(f"sparse_pc_inc={self.sparse_pc_inc} not 8-bit")
+        if not 0 <= self.lookup_type <= 0xF:
+            raise ValueError(f"lookup_type={self.lookup_type} not 4-bit")
+        if self.lookup_type and self.op is not Op.ST:
+            raise ValueError("In-DRAM lookup is an ST-only CTRL feature")
+
+    @property
+    def stage(self) -> Stage:
+        return OP_STAGE[self.op]
+
+    def with_sparse_inc(self, inc: int) -> "Instr":
+        return replace(self, sparse_pc_inc=inc)
+
+    def __str__(self) -> str:  # pragma: no cover - debug aid
+        s = f"{self.op.name} {self.f0:#06x},{self.f1:#06x},{self.f2:#06x}"
+        if self.sparse_pc_inc != 1:
+            s += f" [inc={self.sparse_pc_inc}]"
+        if self.lookup_type:
+            s += f" [lut={self.lookup_type}]"
+        return s
+
+
+def encode(instr: Instr) -> int:
+    """Pack into the 64-bit word: OP(4) F0(16) F1(16) F2(16) CTRL(12)."""
+    ctrl = (instr.sparse_pc_inc << 4) | instr.lookup_type
+    return (
+        (int(instr.op) << 60)
+        | (instr.f0 << 44)
+        | (instr.f1 << 28)
+        | (instr.f2 << 12)
+        | ctrl
+    )
+
+
+def decode(word: int) -> Instr:
+    """Inverse of :func:`encode`."""
+    if not 0 <= word < (1 << WORD_BITS):
+        raise ValueError("word out of 64-bit range")
+    opv = (word >> 60) & 0xF
+    if opv > max(Op):
+        raise ValueError(f"invalid opcode {opv}")
+    return Instr(
+        op=Op(opv),
+        f0=(word >> 44) & _F_MASK,
+        f1=(word >> 28) & _F_MASK,
+        f2=(word >> 12) & _F_MASK,
+        sparse_pc_inc=(word >> 4) & 0xFF,
+        lookup_type=word & 0xF,
+    )
+
+
+def dram_offset(f1: int, f2: int) -> int:
+    """32-bit DRAM offset from the {F1,F2} field pair (paper §3.2)."""
+    return (f1 << FIELD_BITS) | f2
+
+
+def _split_offset(offset: int) -> tuple[int, int]:
+    if not 0 <= offset < (1 << 32):
+        raise ValueError(f"DRAM offset {offset} out of 32-bit range")
+    return (offset >> FIELD_BITS) & _F_MASK, offset & _F_MASK
+
+
+def make_ld(opm_addr: int, offset: int) -> Instr:
+    """LD: OPM[F0] = DRAM[LD_Base + {F1,F2}]."""
+    f1, f2 = _split_offset(offset)
+    return Instr(Op.LD, f0=opm_addr, f1=f1, f2=f2)
+
+
+def make_st(opm_addr: int, offset: int, lookup_type: int = 0) -> Instr:
+    """ST: DRAM[ST_Base + {F1,F2}] = OPM[F0] (optionally via in-DRAM LUT)."""
+    f1, f2 = _split_offset(offset)
+    return Instr(Op.ST, f0=opm_addr, f1=f1, f2=f2, lookup_type=lookup_type)
+
+
+def make_copy(src_addr: int, dst_addr: int, dst_pe: int) -> Instr:
+    """COPY: PE[F2].OPM[F1] = OPM[F0]."""
+    return Instr(Op.COPY, f0=src_addr, f1=dst_addr, f2=dst_pe)

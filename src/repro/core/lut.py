@@ -1,0 +1,78 @@
+"""In-DRAM table lookup for complex activation/classifier functions (§3.9).
+
+RISC-NN keeps its ISA free of transcendentals: an ``ST`` instruction with a
+non-zero 4-bit *In-DRAM Lookup Type* routes the stored value through a
+2^16-entry table held in DRAM (128 KB per table) by the memory-side
+*In-DRAM Table Loader*.
+
+For 16-bit operands the lookup is *exact*: every representable input has
+its own table entry.  We reproduce that contract with a Q8.8 fixed-point
+key (the paper's arithmetic is 16-bit fixed point): ``index =
+round(x * 256)`` clamped to int16, so the table covers [-128, 128) with
+1/256 resolution — exact for any value the 16-bit datapath can hold.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+__all__ = [
+    "TABLE_ENTRIES", "TABLE_BYTES", "LOOKUP_TYPES", "quantize_u16",
+    "build_table", "apply_lookup", "lookup_fn",
+]
+
+TABLE_ENTRIES = 1 << 16
+TABLE_BYTES = TABLE_ENTRIES * 2  # 128 KB, paper §3.9
+_FRAC_BITS = 8
+_SCALE = 1 << _FRAC_BITS
+
+
+def quantize_u16(x: np.ndarray) -> np.ndarray:
+    """Q8.8 fixed-point key of ``x`` as a u16 table index."""
+    q = np.clip(np.rint(np.asarray(x, np.float64) * _SCALE), -32768, 32767)
+    return q.astype(np.int16).view(np.uint16)
+
+
+def dequantize(idx: np.ndarray) -> np.ndarray:
+    return idx.astype(np.uint16).view(np.int16).astype(np.float32) / _SCALE
+
+
+#: 4-bit In-DRAM Lookup Type -> function.  Type 0 = plain store (no lookup).
+LOOKUP_TYPES: Dict[int, Callable[[np.ndarray], np.ndarray]] = {
+    1: lambda x: 1.0 / (1.0 + np.exp(-x)),            # sigmoid
+    2: np.tanh,                                        # tanh
+    3: np.exp,                                         # exp (softmax numerator)
+    4: lambda x: np.log(np.maximum(x, 1e-6)),          # log
+    5: lambda x: 1.0 / np.where(np.abs(x) < 1e-6, 1e-6, x),  # reciprocal (VDV)
+    6: lambda x: 0.5 * x * (1 + np.tanh(
+        np.sqrt(2 / np.pi) * (x + 0.044715 * x ** 3))),  # gelu(tanh)
+    7: lambda x: np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0),  # softplus
+}
+
+
+def lookup_fn(lookup_type: int) -> Callable[[np.ndarray], np.ndarray]:
+    try:
+        return LOOKUP_TYPES[lookup_type]
+    except KeyError:
+        raise ValueError(f"unknown In-DRAM lookup type {lookup_type}") from None
+
+
+def build_table(lookup_type: int) -> np.ndarray:
+    """The 2^16-entry in-DRAM table for a lookup type (float32 values)."""
+    keys = np.arange(TABLE_ENTRIES, dtype=np.uint16)
+    xs = dequantize(keys)
+    return lookup_fn(lookup_type)(xs.astype(np.float64)).astype(np.float32)
+
+
+_TABLE_CACHE: Dict[int, np.ndarray] = {}
+
+
+def apply_lookup(lookup_type: int, x: np.ndarray) -> np.ndarray:
+    """Memory-controller semantics: value -> table[quantize(value)]."""
+    if lookup_type == 0:
+        return np.asarray(x, np.float32)
+    tab = _TABLE_CACHE.get(lookup_type)
+    if tab is None:
+        tab = _TABLE_CACHE[lookup_type] = build_table(lookup_type)
+    return tab[quantize_u16(x)]

@@ -1,0 +1,401 @@
+"""Performance/energy model of the RISC-NN machine (paper §4, Table 2).
+
+An event-driven model at *ExeBlock-stage* granularity: each PE has four
+decoupled units (LD / CAL / FLOW / ST) plus an Instruction Loader, all of
+which process their stage queues concurrently (paper Fig 5).  Shared
+resources — the DDR4 channel behind the memory-controller cache, and the
+two data NoCs — are modelled as servers with finite bandwidth, which is
+what produces the multi-instance contention sweet spots of Table 7.
+
+The cache is a real set-associative LRU simulated over the word-address
+trace of every LD/ST (instruction loads bypass it, paper §3.10).
+
+Outputs: makespan (cycles), MAC-unit utilisation (Figs 11/12), DRAM and
+per-NoC traffic (Figs 13/14), and energy via :mod:`repro.core.energy`
+(Figs 15/16/19/22/23).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .energy import DEFAULT_ENERGY, EnergyModel
+from .exeblock import ExecutionGraph, ExeBlock
+from .isa import Op, Stage
+
+__all__ = ["MachineConfig", "SimResult", "simulate"]
+
+
+@dataclass(frozen=True)
+class MachineConfig:
+    """Table 2 defaults."""
+    n_pes: int = 64
+    simd: int = 8
+    freq_ghz: float = 1.887
+    # DDR4-2400, one 64-bit channel: 19.2 GB/s -> bytes per core cycle
+    dram_bw_bytes_cycle: float = 19.2 / 1.887
+    dram_latency_cycles: int = 120
+    cache_bytes: int = 1 << 20
+    cache_ways: int = 4
+    cache_line: int = 64
+    cache_slices: int = 8
+    cache_bw_bytes_cycle: float = 8 * 16.0   # 8 slices x 128-bit
+    noc_flit_bytes: int = 16                  # 128-bit data NoCs
+    hop_cycles: int = 1
+    ld_issue_cycles: float = 1.0
+    st_issue_cycles: float = 1.0
+    cal_cycles_per_instr: float = 1.0
+    copy_cycles_per_instr: float = 1.0
+    instr_bytes: int = 8                      # 64-bit instructions
+    #: aggregate inter-PE NoC bandwidth.  The 8x8 mesh has 2*2*8*7
+    #: directed links x 16 B/cycle; multicast-tree traffic (FLOW) is
+    #: neighbour-dominated, so the effective aggregate is far above the
+    #: bisection.  We use 32 concurrent links as the serviceable
+    #: aggregate (conservative vs. the 224-link ceiling).
+    interpe_bw_bytes_cycle: float = 32 * 16.0
+
+    @property
+    def word_bytes(self) -> int:
+        return self.simd * 2  # SIMD x 16-bit
+
+    @property
+    def mesh_side(self) -> int:
+        return int(math.isqrt(self.n_pes))
+
+    @property
+    def peak_macs_per_cycle(self) -> int:
+        return self.n_pes * self.simd
+
+
+class _LRUCache:
+    """Set-associative LRU over line addresses."""
+
+    def __init__(self, cfg: MachineConfig) -> None:
+        self.line = cfg.cache_line
+        self.ways = cfg.cache_ways
+        self.n_sets = cfg.cache_bytes // (cfg.cache_line * cfg.cache_ways)
+        self.sets: List[Dict[int, int]] = [dict() for _ in range(self.n_sets)]
+        self.tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.writebacks = 0
+        self.dirty: set = set()
+
+    def access(self, byte_addr: int, write: bool) -> bool:
+        """Returns True on hit.  Allocate-on-miss, write-back policy."""
+        self.tick += 1
+        line = byte_addr // self.line
+        s = self.sets[line % self.n_sets]
+        if line in s:
+            s[line] = self.tick
+            self.hits += 1
+            if write:
+                self.dirty.add(line)
+            return True
+        self.misses += 1
+        if len(s) >= self.ways:
+            victim = min(s, key=s.get)
+            del s[victim]
+            if victim in self.dirty:
+                self.dirty.discard(victim)
+                self.writebacks += 1
+        s[line] = self.tick
+        if write:
+            self.dirty.add(line)
+        return False
+
+
+@dataclass
+class SimResult:
+    cycles: float
+    mac_utilization: float          # arithmetic-CAL busy / (PEs x cycles)
+    madd_utilization: float         # MADD-only (the paper's MAC metric)
+    dram_bytes: float               # off-chip traffic (misses + wb + instr)
+    mem_noc_bytes: float
+    interpe_noc_bytes: float
+    ctrl_noc_bytes: float
+    cache_hit_rate: float
+    energy_pj: float
+    energy_breakdown: Dict[str, float]
+    executed_cal_instrs: int
+    executed_instrs: int
+
+    @property
+    def time_us(self) -> float:
+        return self.cycles / (1.887e3)
+
+    def ops(self) -> float:
+        """Total lane-ops (a MAC = 2 ops, paper Table 2)."""
+        return self.executed_cal_instrs * 2  # per-lane handled by caller
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "cycles": self.cycles,
+            "mac_util": self.mac_utilization,
+            "madd_util": self.madd_utilization,
+            "dram_bytes": self.dram_bytes,
+            "mem_noc_bytes": self.mem_noc_bytes,
+            "interpe_noc_bytes": self.interpe_noc_bytes,
+            "cache_hit_rate": self.cache_hit_rate,
+            "energy_pj": self.energy_pj,
+        }
+
+
+def _pe_xy(pe: int, side: int) -> Tuple[int, int]:
+    return pe % side, pe // side
+
+
+def _mem_hops(pe: int, cfg: MachineConfig) -> int:
+    """Hops from a PE to its nearest edge memory-controller slice
+    (controllers sit on the mesh edge, paper Fig 1)."""
+    x, y = _pe_xy(pe, cfg.mesh_side)
+    return min(y, cfg.mesh_side - 1 - y) + 1
+
+
+def _pe_hops(a: int, b: int, cfg: MachineConfig) -> int:
+    ax, ay = _pe_xy(a, cfg.mesh_side)
+    bx, by = _pe_xy(b, cfg.mesh_side)
+    return abs(ax - bx) + abs(ay - by)
+
+
+@dataclass
+class _Unit:
+    free_at: float = 0.0
+    busy: float = 0.0
+
+    def acquire(self, ready: float, service: float) -> Tuple[float, float]:
+        start = max(ready, self.free_at)
+        end = start + service
+        self.free_at = end
+        self.busy += service
+        return start, end
+
+
+@dataclass
+class _Server:
+    """Shared bandwidth server (DRAM channel / inter-PE NoC aggregate)."""
+    bw: float
+    free_at: float = 0.0
+    bytes_served: float = 0.0
+
+    def transfer(self, ready: float, nbytes: float,
+                 latency: float = 0.0) -> float:
+        if nbytes <= 0:
+            return ready
+        start = max(ready, self.free_at)
+        end = start + nbytes / self.bw
+        self.free_at = end
+        self.bytes_served += nbytes
+        return end + latency
+
+
+def simulate(graph: ExecutionGraph, cfg: MachineConfig = MachineConfig(),
+             energy: EnergyModel = DEFAULT_ENERGY,
+             sparse_cal_fraction: Optional[float] = None) -> SimResult:
+    """Run the performance model over an ExecutionGraph.
+
+    ``sparse_cal_fraction`` overrides nothing — sparse skipping comes from
+    the blocks' own ``executed_pcs()``; the arg is accepted for ablations
+    that scale CAL work analytically (None = faithful).
+    """
+    ld_u = [_Unit() for _ in range(cfg.n_pes)]
+    cal_u = [_Unit() for _ in range(cfg.n_pes)]
+    flow_u = [_Unit() for _ in range(cfg.n_pes)]
+    st_u = [_Unit() for _ in range(cfg.n_pes)]
+    loader_u = [_Unit() for _ in range(cfg.n_pes)]
+    dram = _Server(bw=cfg.dram_bw_bytes_cycle)
+    interpe = _Server(bw=cfg.interpe_bw_bytes_cycle)
+    cache_srv = _Server(bw=cfg.cache_bw_bytes_cycle)   # shared front-end
+    cache = _LRUCache(cfg)
+
+    e = {k: 0.0 for k in ("cal", "opm", "iram", "ctrl", "noc", "cache",
+                          "dram", "instr_load")}
+    mem_noc_bytes = 0.0
+    ctrl_noc_bytes = 0.0
+    exec_cal = 0
+    exec_madd_cycles = 0
+    exec_instrs = 0
+    makespan = 0.0
+    instr_loaded: Dict[Tuple[int, str], float] = {}
+
+    for task in graph.tasks:
+        order = task.topo_order()
+        flow_end: Dict[Tuple[str, int], float] = {}
+        task_enable = makespan  # host enables tasks consecutively
+        ctrl_noc_bytes += cfg.n_pes * 11  # 85-bit task-enable broadcast
+
+        for r in range(task.repeats):
+            for b in order:
+                pe = b.logical_pe % cfg.n_pes
+                pcs = b.executed_pcs()
+                instrs = [b.instrs[pc] for pc in pcs]
+                n_ld = sum(1 for i in instrs if i.op is Op.LD)
+                n_st = sum(1 for i in instrs if i.op is Op.ST)
+                n_copy = sum(1 for i in instrs if i.op is Op.COPY)
+                cal_instrs = [i for i in instrs if i.stage is Stage.CAL]
+                n_cal = len(cal_instrs)
+                n_madd = sum(1 for i in cal_instrs if i.op is Op.MADD)
+
+                # ---- instruction loading (once per block: ExeBlock Reuse)
+                key = (task.task_id, b.name)
+                if key not in instr_loaded:
+                    ib = len(b.instrs) * cfg.instr_bytes
+                    s, done = loader_u[pe].acquire(task_enable,
+                                                   ib / cfg.dram_bw_bytes_cycle)
+                    done = dram.transfer(s, ib, cfg.dram_latency_cycles)
+                    loader_u[pe].free_at = done
+                    instr_loaded[key] = done
+                    e["instr_load"] += ib * energy.e_dram_per_byte_pj
+                    mem_noc_bytes += ib
+                    e["noc"] += (ib / cfg.noc_flit_bytes) * _mem_hops(pe, cfg) \
+                        * energy.e_noc_hop_per_flit_pj
+                inst_ready = instr_loaded[key]
+
+                # ---- LD stage
+                ld_ready = max(task_enable, inst_ready)
+                hit_b = miss_b = 0.0
+                for i in instrs:
+                    if i.op is Op.LD:
+                        addr = (task.ld_base + ((i.f1 << 16) | i.f2)) \
+                            * cfg.word_bytes
+                        if cache.access(addr, write=False):
+                            hit_b += cfg.word_bytes
+                        else:
+                            miss_b += cfg.word_bytes
+                if n_ld:
+                    issue = n_ld * cfg.ld_issue_cycles
+                    s, _ = ld_u[pe].acquire(ld_ready, issue)
+                    # hit traffic contends on the shared cache front-end
+                    # (8 slices): this is what separates the reuse
+                    # schemes in steady state — LD pressure.
+                    hit_done = cache_srv.transfer(s, hit_b)
+                    dram_done = dram.transfer(s, miss_b,
+                                              cfg.dram_latency_cycles
+                                              if miss_b else 0)
+                    ld_end = max(s + issue, hit_done, dram_done) \
+                        + _mem_hops(pe, cfg) * cfg.hop_cycles
+                    ld_u[pe].free_at = ld_end
+                    nbytes = n_ld * cfg.word_bytes
+                    mem_noc_bytes += nbytes
+                    e["cache"] += (n_ld) * energy.e_cache_access_pj
+                    e["dram"] += miss_b * energy.e_dram_per_byte_pj
+                    e["noc"] += (nbytes / cfg.noc_flit_bytes) \
+                        * _mem_hops(pe, cfg) * energy.e_noc_hop_per_flit_pj
+                    e["opm"] += n_ld * energy.e_opm_access_pj
+                    e["iram"] += n_ld * (energy.e_iram_fetch_pj
+                                         + energy.e_ctrl_per_instr_pj)
+                else:
+                    ld_end = ld_ready
+
+                # ---- activation: all predecessors' FLOW of this repeat
+                preds = [p for p, succs in
+                         ((blk.name, blk.successors) for blk in task.blocks)
+                         if b.name in succs]
+                act = max((flow_end.get((p, r), 0.0) for p in preds),
+                          default=0.0)
+                if preds:
+                    ctrl_noc_bytes += len(preds) * 11
+
+                # ---- CAL stage
+                cal_ready = max(ld_end, act)
+                cal_svc = n_cal * cfg.cal_cycles_per_instr
+                s, cal_end = cal_u[pe].acquire(cal_ready, cal_svc)
+                exec_cal += sum(1 for i in cal_instrs
+                                if i.op not in (Op.PREREAD0, Op.PREREAD1))
+                exec_madd_cycles += n_madd
+                for i in cal_instrs:
+                    if i.op is Op.MADD:
+                        e["cal"] += energy.e_mac_lane_pj * cfg.simd
+                    elif i.op not in (Op.PREREAD0, Op.PREREAD1):
+                        e["cal"] += energy.e_alu_lane_pj * cfg.simd
+                    e["opm"] += 4 * energy.e_opm_access_pj
+                    e["iram"] += energy.e_iram_fetch_pj
+                    e["ctrl"] += energy.e_ctrl_per_instr_pj
+
+                # ---- FLOW stage
+                if n_copy:
+                    svc = n_copy * cfg.copy_cycles_per_instr
+                    s, _ = flow_u[pe].acquire(cal_end, svc)
+                    nbytes = n_copy * cfg.word_bytes
+                    hops = [
+                        _pe_hops(pe, i.f2 % cfg.n_pes, cfg)
+                        for i in instrs if i.op is Op.COPY]
+                    net_done = interpe.transfer(
+                        s, nbytes, max(hops, default=0) * cfg.hop_cycles)
+                    fl_end = max(s + svc, net_done)
+                    flow_u[pe].free_at = fl_end
+                    e["noc"] += sum(hops) * energy.e_noc_hop_per_flit_pj
+                    e["opm"] += 2 * n_copy * energy.e_opm_access_pj
+                    e["iram"] += n_copy * (energy.e_iram_fetch_pj
+                                           + energy.e_ctrl_per_instr_pj)
+                else:
+                    fl_end = cal_end
+                flow_end[(b.name, r)] = fl_end
+                if b.successors:
+                    ctrl_noc_bytes += len(b.successors) * 11
+
+                # ---- ST stage
+                if n_st:
+                    hit_b = miss_b = 0.0
+                    for i in instrs:
+                        if i.op is Op.ST:
+                            addr = (task.st_base + ((i.f1 << 16) | i.f2)) \
+                                * cfg.word_bytes
+                            if cache.access(addr, write=True):
+                                hit_b += cfg.word_bytes
+                            else:
+                                miss_b += cfg.word_bytes
+                    issue = n_st * cfg.st_issue_cycles
+                    s, _ = st_u[pe].acquire(fl_end, issue)
+                    hit_done = cache_srv.transfer(s, hit_b)
+                    # write-back cache: miss fills occupy DRAM
+                    dram_done = dram.transfer(s, miss_b, 0)
+                    st_end = max(s + issue, hit_done, dram_done) \
+                        + _mem_hops(pe, cfg) * cfg.hop_cycles
+                    st_u[pe].free_at = st_end
+                    nbytes = n_st * cfg.word_bytes
+                    mem_noc_bytes += nbytes
+                    e["cache"] += n_st * energy.e_cache_access_pj
+                    e["dram"] += miss_b * energy.e_dram_per_byte_pj
+                    e["noc"] += (nbytes / cfg.noc_flit_bytes) \
+                        * _mem_hops(pe, cfg) * energy.e_noc_hop_per_flit_pj
+                    e["opm"] += n_st * energy.e_opm_access_pj
+                    e["iram"] += n_st * (energy.e_iram_fetch_pj
+                                         + energy.e_ctrl_per_instr_pj)
+                    # in-DRAM table lookups add one table read per value
+                    n_lut = sum(1 for i in instrs
+                                if i.op is Op.ST and i.lookup_type)
+                    e["dram"] += n_lut * cfg.simd * 2 \
+                        * energy.e_dram_per_byte_pj
+                else:
+                    st_end = fl_end
+
+                exec_instrs += len(instrs)
+                makespan = max(makespan, st_end)
+
+    # dirty-line writebacks at the end
+    wb_bytes = cache.writebacks * cfg.cache_line
+    e["dram"] += wb_bytes * energy.e_dram_per_byte_pj
+
+    total_accesses = cache.hits + cache.misses
+    instr_bytes = sum(len(b.instrs) * cfg.instr_bytes
+                      for t in graph.tasks for b in t.blocks)
+    dram_bytes = cache.misses * cfg.cache_line + wb_bytes + instr_bytes
+    energy_pj = sum(e.values())
+    cycles = max(makespan, 1.0)
+    cal_busy = sum(u.busy for u in cal_u)
+    return SimResult(
+        cycles=cycles,
+        mac_utilization=cal_busy / (cfg.n_pes * cycles),
+        madd_utilization=exec_madd_cycles / (cfg.n_pes * cycles),
+        dram_bytes=dram_bytes,
+        mem_noc_bytes=mem_noc_bytes,
+        interpe_noc_bytes=interpe.bytes_served,
+        ctrl_noc_bytes=ctrl_noc_bytes,
+        cache_hit_rate=cache.hits / total_accesses if total_accesses else 0.0,
+        energy_pj=energy_pj,
+        energy_breakdown=e,
+        executed_cal_instrs=exec_cal,
+        executed_instrs=exec_instrs,
+    )

@@ -1,0 +1,116 @@
+"""Sparse-NN support: pruning -> sparse vectors -> Sparse PC Inc (paper
+§3.4, §5.4, Figs 18/19).
+
+The compiler-side flow is exactly the paper's Fig 18: identify
+ineffective weights, emit a per-ExeBlock *sparse vector* (one bit per
+instruction), and let the Instruction-Loader semantics
+(`ExeBlock.apply_sparse_vector`) rewrite each instruction's
+``Sparse PC Inc`` so the CAL pipeline jumps over dead MACs.
+
+Two entry points:
+
+* :func:`conv_sparse_vectors` — exact mapping for the panel-structured
+  conv programs (No/Filter/Ifmap reuse): MADD j of item (o, pos) uses
+  weight (o, c, k=j), so a pruned-weight set maps deterministically to
+  instruction bits.  The interpreter equivalence test (sparse program ==
+  dense program with zeroed weights) runs on this path.
+* :func:`random_sparse_vectors` — statistical pruning at a given keep
+  rate for perf/energy studies on any program (Fig 19 uses the layer
+  compress rates of Table 3).
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from .dataflows import ConvSpec, Reuse, panel_items
+from .exeblock import ExeBlock, ExecutionGraph
+from .isa import Op, Stage
+
+__all__ = ["conv_sparse_vectors", "random_sparse_vectors", "apply_pruning",
+           "prune_weights"]
+
+
+def prune_weights(weights: np.ndarray, keep_frac: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Magnitude pruning to ``keep_frac`` (the paper's 'compress rate'):
+    returns the pruned weights (zeros at dropped positions)."""
+    flat = np.abs(weights).ravel()
+    k = max(1, int(round(keep_frac * flat.size)))
+    thresh = np.partition(flat, -k)[-k]
+    mask = np.abs(weights) >= thresh
+    return weights * mask
+
+
+def conv_sparse_vectors(graph: ExecutionGraph, spec: ConvSpec,
+                        scheme: Reuse, pruned: Set[Tuple[int, int]],
+                        *, items_per_block: int,
+                        n_items: int, channel: int = 0,
+                        instance: int = 0) -> Dict[str, List[bool]]:
+    """Per-block sparse vectors for the simple panel schemes.
+
+    ``pruned`` is a set of (out_channel, k) weight coordinates (for the
+    fixed input channel) that pruning removed.  In the generated
+    programs, each item's CAL chain is K consecutive MADDs in k-order.
+    """
+    assert scheme in (Reuse.NO_REUSE, Reuse.FILTER_REUSE,
+                      Reuse.IFMAP_REUSE), "exact mapping: panel schemes"
+    items = panel_items(spec, scheme, n_items=n_items, instance=instance)
+    vectors: Dict[str, List[bool]] = {}
+    task = graph.tasks[-1]
+    cal_blocks = [b for b in task.blocks if b.n_cal > 0]
+    # panel blocks appear in item order; skip loader/multicast-only blocks
+    idx = 0
+    for b in cal_blocks:
+        rng_cal = b.stage_pcs.range(Stage.CAL)
+        n_madd = sum(1 for pc in rng_cal if b.instrs[pc].op is Op.MADD)
+        if n_madd % spec.k:
+            continue                      # not an item chain block
+        n_block_items = n_madd // spec.k
+        block_items = items[idx:idx + n_block_items]
+        idx += n_block_items
+        valid = [True] * len(b.instrs)
+        it = iter([(o, k) for (o, _pos) in block_items
+                   for k in range(spec.k)])
+        for pc in rng_cal:
+            if b.instrs[pc].op is Op.MADD:
+                o, k = next(it)
+                if (o, k) in pruned:
+                    valid[pc] = False
+        if b.instrs and not valid[0]:
+            valid[0] = True               # hardware fetches PC 0
+        vectors[b.name] = valid
+    return vectors
+
+
+def random_sparse_vectors(graph: ExecutionGraph, keep_frac: float,
+                          rng: np.random.Generator
+                          ) -> Dict[str, List[bool]]:
+    """Statistical pruning: drop (1-keep_frac) of each block's MADDs."""
+    vectors: Dict[str, List[bool]] = {}
+    for _t, b in graph.all_blocks():
+        madds = [pc for pc, ins in enumerate(b.instrs)
+                 if ins.op is Op.MADD]
+        if not madds:
+            continue
+        n_drop = int(round((1.0 - keep_frac) * len(madds)))
+        drop = set(rng.choice(madds, size=n_drop, replace=False).tolist()) \
+            if n_drop else set()
+        valid = [pc not in drop for pc in range(len(b.instrs))]
+        if b.instrs and not valid[0]:
+            valid[0] = True
+        vectors[b.name] = valid
+    return vectors
+
+
+def apply_pruning(graph: ExecutionGraph,
+                  vectors: Dict[str, List[bool]]) -> ExecutionGraph:
+    """Return a sparse copy of ``graph`` with Sparse PC Inc rewritten
+    (Instruction-Loader semantics, paper §3.4)."""
+    g = copy.deepcopy(graph)
+    for _t, b in g.all_blocks():
+        if b.name in vectors:
+            b.apply_sparse_vector(vectors[b.name])
+    return g

@@ -1,0 +1,233 @@
+"""The RISC-NN translator (paper §3.12).
+
+Responsibilities, exactly as the paper lists them:
+
+1. **Map ExeBlocks to physical PEs** — load-balanced over instruction count
+   and Operand-RAM pressure, while keeping every ExeBlock that shares a
+   logical PE id on the same physical PE (data sharing through the OPM
+   requires co-residency, paper Fig 8/9).
+2. **Map logical in-PE addresses to physical Operand-RAM entries** —
+   balancing bank occupancy so the three CAL read ports hit distinct
+   banks.  Where a CAL instruction still has an intra-bank conflict the
+   translator injects ``PREREAD0``/``PREREAD1`` (paper §3.7).
+3. **Map logical DRAM addresses to physical DRAM addresses.**
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from .exeblock import ExecutionGraph, ExeBlock, Task
+from .isa import Instr, Op, Stage
+
+__all__ = ["TranslatorConfig", "TranslationReport", "translate"]
+
+
+@dataclass(frozen=True)
+class TranslatorConfig:
+    n_pes: int = 64
+    opm_banks: int = 16
+    opm_rows: int = 128           # entries per bank (Table 2)
+    iram_words_per_pe: int = 8 * 512  # 8 banks x 512 x 64-bit words
+
+
+@dataclass
+class TranslationReport:
+    pe_map: Dict[int, int] = field(default_factory=dict)
+    #: per (physical PE) -> logical addr -> physical OPM entry
+    opm_map: Dict[int, Dict[int, int]] = field(default_factory=dict)
+    prereads_injected: int = 0
+    max_opm_entries: int = 0
+    max_instrs_per_pe: int = 0
+    bank_occupancy: Dict[int, List[int]] = field(default_factory=dict)
+
+    def physical_bank(self, cfg: TranslatorConfig, entry: int) -> int:
+        return entry % cfg.opm_banks
+
+
+def _balance_pes(graph: ExecutionGraph, cfg: TranslatorConfig) -> Dict[int, int]:
+    """Greedy longest-processing-time assignment of logical PE groups."""
+    load: Dict[int, int] = {}
+    for _, b in graph.all_blocks():
+        load[b.logical_pe] = load.get(b.logical_pe, 0) + len(b.instrs) \
+            + len(b.opm_entries())
+    pe_load = [0] * cfg.n_pes
+    mapping: Dict[int, int] = {}
+    for lpe, w in sorted(load.items(), key=lambda kv: (-kv[1], kv[0])):
+        tgt = min(range(cfg.n_pes), key=lambda p: (pe_load[p], p))
+        mapping[lpe] = tgt
+        pe_load[tgt] += w
+    return mapping
+
+
+def _allocate_banks(addrs_in_use: List[int],
+                    conflicts: List[Tuple[int, ...]],
+                    cfg: TranslatorConfig) -> Dict[int, int]:
+    """Assign each logical address a physical entry, spreading co-read
+    operands across banks (greedy colouring on the CAL co-occurrence
+    hypergraph), then packing rows bank-interleaved."""
+    neighbour: Dict[int, set] = {a: set() for a in addrs_in_use}
+    for grp in conflicts:
+        for a in grp:
+            neighbour.setdefault(a, set()).update(x for x in grp if x != a)
+    bank_of: Dict[int, int] = {}
+    bank_rows = [0] * cfg.opm_banks
+    # high-degree first
+    for a in sorted(neighbour, key=lambda a: (-len(neighbour[a]), a)):
+        used = {bank_of[n] for n in neighbour[a] if n in bank_of}
+        # least-occupied bank not used by any co-read neighbour, if possible
+        candidates = [b for b in range(cfg.opm_banks)
+                      if b not in used and bank_rows[b] < cfg.opm_rows]
+        if not candidates:
+            candidates = [b for b in range(cfg.opm_banks)
+                          if bank_rows[b] < cfg.opm_rows]
+        if not candidates:
+            raise ValueError(
+                f"Operand RAM overflow: >{cfg.opm_banks * cfg.opm_rows} "
+                "entries needed on one PE")
+        b = min(candidates, key=lambda b: (bank_rows[b], b))
+        bank_of[a] = b
+        bank_rows[b] += 1
+    # physical entry = row * banks + bank  (uniform interleaved addressing)
+    row_next = [0] * cfg.opm_banks
+    entry_of: Dict[int, int] = {}
+    for a in sorted(bank_of):
+        b = bank_of[a]
+        entry_of[a] = row_next[b] * cfg.opm_banks + b
+        row_next[b] += 1
+    return entry_of
+
+
+def _rewrite_block(block: ExeBlock, entry_maps: Dict[int, Dict],
+                   pe_map: Dict[int, int],
+                   cfg: TranslatorConfig) -> Tuple[ExeBlock, int]:
+    """Rewrite a block's addresses to physical; inject PREREADs for any
+    residual CAL bank conflicts.  Returns (new block, prereads injected).
+
+    Logical OPM addresses are namespaced per *logical* PE — two logical
+    PEs co-resident on one physical PE keep disjoint physical entries.
+    """
+    lpe = block.logical_pe
+    entry_of = {a: e for (l, a), e in entry_maps[pe_map[lpe]].items()
+                if l == lpe}
+    out: List[Instr] = []
+    injected = 0
+    for ins in block.instrs:
+        if ins.op is Op.LD or ins.op is Op.ST:
+            out.append(Instr(ins.op, f0=entry_of[ins.f0], f1=ins.f1,
+                             f2=ins.f2, lookup_type=ins.lookup_type))
+        elif ins.op is Op.COPY:
+            dst_pe = pe_map[ins.f2]
+            dst_entry = entry_maps[dst_pe][(ins.f2, ins.f1)]
+            out.append(Instr(Op.COPY, f0=entry_of[ins.f0],
+                             f1=dst_entry, f2=dst_pe))
+        elif ins.op in (Op.PREREAD0, Op.PREREAD1):
+            out.append(Instr(ins.op, f0=entry_of.get(ins.f0, ins.f0),
+                             f1=entry_of.get(ins.f1, ins.f1)))
+        else:  # arithmetic CAL
+            p0, p1, p2 = (entry_of[ins.f0], entry_of[ins.f1], entry_of[ins.f2])
+            b0, b1, b2 = (p % cfg.opm_banks for p in (p0, p1, p2))
+            # CAL ports 0-2 must be served simultaneously (paper §3.5);
+            # resolve residual same-bank reads with PREREADs (§3.7).
+            # Port 2 only reads for MADD (the accumulator) and has no
+            # pre-read register; ports reading the *same* address share
+            # one bank access (broadcast), so only distinct addresses in
+            # the same bank conflict.
+            ports_of: Dict[int, List[int]] = {}
+            ports_of.setdefault(p0, []).append(0)
+            ports_of.setdefault(p1, []).append(1)
+            if ins.op is Op.MADD:
+                ports_of.setdefault(p2, []).append(2)
+            by_bank: Dict[int, List[int]] = {}
+            for a in ports_of:
+                by_bank.setdefault(a % cfg.opm_banks, []).append(a)
+            pre0 = pre1 = False
+            for alist in by_bank.values():
+                if len(alist) <= 1:
+                    continue
+                # keep (at most) one address on the live bank port —
+                # preferentially the one port 2 needs (it cannot divert)
+                alist = sorted(alist,
+                               key=lambda a: (0 if 2 in ports_of[a] else 1, a))
+                for a in alist[1:]:
+                    if 0 in ports_of[a]:
+                        pre0 = True
+                    if 1 in ports_of[a]:
+                        pre1 = True
+            if pre0:
+                out.append(Instr(Op.PREREAD0, f0=p0))
+                injected += 1
+            if pre1:
+                out.append(Instr(Op.PREREAD1, f1=p1))
+                injected += 1
+            out.append(Instr(ins.op, f0=p0, f1=p1, f2=p2))
+    nb = ExeBlock(name=block.name, instrs=out, logical_pe=pe_map[block.logical_pe],
+                  priority=block.priority, successors=list(block.successors),
+                  sparse_execution=block.sparse_execution,
+                  inst_dram_address=block.inst_dram_address)
+    return nb, injected
+
+
+def translate(graph: ExecutionGraph,
+              cfg: TranslatorConfig = TranslatorConfig()
+              ) -> Tuple[ExecutionGraph, TranslationReport]:
+    """Lower a logical ExecutionGraph to a physical one."""
+    report = TranslationReport()
+    pe_map = _balance_pes(graph, cfg)
+    report.pe_map = pe_map
+
+    # gather, per physical PE, every (logical-PE, logical-address) key and
+    # CAL co-occurrence groups (for bank spreading)
+    addrs: Dict[int, set] = {}
+    confl: Dict[int, List[Tuple]] = {}
+    for task in graph.tasks:
+        for b in task.blocks:
+            pe = pe_map[b.logical_pe]
+            lpe = b.logical_pe
+            A = addrs.setdefault(pe, set())
+            C = confl.setdefault(pe, [])
+            for ins in b.instrs:
+                if ins.op in (Op.LD, Op.ST):
+                    A.add((lpe, ins.f0))
+                elif ins.op is Op.COPY:
+                    A.add((lpe, ins.f0))
+                    addrs.setdefault(pe_map[ins.f2], set()).add(
+                        (ins.f2, ins.f1))
+                elif ins.stage is Stage.CAL and ins.op not in (
+                        Op.PREREAD0, Op.PREREAD1):
+                    A.update(((lpe, ins.f0), (lpe, ins.f1), (lpe, ins.f2)))
+                    C.append(((lpe, ins.f0), (lpe, ins.f1), (lpe, ins.f2)))
+
+    entry_maps: Dict[int, Dict] = {}
+    for pe, aset in addrs.items():
+        entry_maps[pe] = _allocate_banks(sorted(aset), confl.get(pe, []), cfg)
+    report.opm_map = entry_maps
+    report.max_opm_entries = max((len(m) for m in entry_maps.values()),
+                                 default=0)
+
+    new_tasks: List[Task] = []
+    instr_count: Dict[int, int] = {}
+    for task in graph.tasks:
+        new_blocks = []
+        for b in task.blocks:
+            pe = pe_map[b.logical_pe]
+            nb, inj = _rewrite_block(b, entry_maps, pe_map, cfg)
+            report.prereads_injected += inj
+            instr_count[pe] = instr_count.get(pe, 0) + len(nb.instrs)
+            new_blocks.append(nb)
+        new_tasks.append(Task(task_id=task.task_id, blocks=new_blocks,
+                              ld_base=task.ld_base, st_base=task.st_base,
+                              repeats=task.repeats))
+    report.max_instrs_per_pe = max(instr_count.values(), default=0)
+    if report.max_instrs_per_pe > cfg.iram_words_per_pe:
+        raise ValueError(
+            f"Instruction RAM overflow: {report.max_instrs_per_pe} > "
+            f"{cfg.iram_words_per_pe} words on one PE")
+    occupancy = {}
+    for pe, m in entry_maps.items():
+        occ = [0] * cfg.opm_banks
+        for e in m.values():
+            occ[e % cfg.opm_banks] += 1
+        occupancy[pe] = occ
+    report.bank_occupancy = occupancy
+    return ExecutionGraph(name=graph.name, tasks=new_tasks), report

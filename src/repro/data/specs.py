@@ -1,0 +1,57 @@
+"""Model-input specifications for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) — the dry-run lowers against these.  The
+synthetic pipeline (`data/pipeline.py`) materializes concrete batches
+with identical structure for smoke tests / the example trainer.
+
+Modality frontends are stubs per the brief: whisper gets precomputed
+frame embeddings, qwen2-vl gets precomputed patch embeddings + M-RoPE
+position ids.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["train_specs", "train_axes", "decode_token_specs"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_specs(cfg, batch: int, seq: int) -> Dict[str, SDS]:
+    """Training / prefill batch: tokens + labels (+ frontend stubs)."""
+    specs = {
+        "tokens": SDS((batch, seq), jnp.int32),
+        "labels": SDS((batch, seq), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((batch, cfg.n_frames, cfg.d_model),
+                              jnp.bfloat16)
+    if cfg.rope_kind == "mrope":
+        specs["mrope_positions"] = SDS((batch, 3, seq), jnp.int32)
+    if cfg.n_patches:
+        specs["patch_embeds"] = SDS((batch, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)
+    return specs
+
+
+def train_axes(cfg, batch: int, seq: int) -> Dict[str, Tuple]:
+    """Logical axes for each entry of :func:`train_specs` (batch dim 0)."""
+    axes = {
+        "tokens": ("batch", None),
+        "labels": ("batch", None),
+    }
+    if cfg.is_encoder_decoder:
+        axes["frames"] = ("batch", None, None)
+    if cfg.rope_kind == "mrope":
+        axes["mrope_positions"] = ("batch", None, None)
+    if cfg.n_patches:
+        axes["patch_embeds"] = ("batch", None, None)
+    return axes
+
+
+def decode_token_specs(cfg, batch: int) -> Tuple[SDS, Tuple]:
+    return SDS((batch, 1), jnp.int32), ("batch", None)

@@ -1,0 +1,3 @@
+from .kernel import matmul_block_sparse  # noqa: F401
+from .ops import compile_mask, mask_from_weights, matmul, sparse_savings  # noqa: F401
+from .ref import matmul_block_sparse_ref  # noqa: F401

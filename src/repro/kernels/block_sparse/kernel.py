@@ -1,0 +1,78 @@
+"""Block-sparse matmul — the paper's Sparse-PC-Inc on TPU (§5.4).
+
+RISC-NN skips pruned weights by rewriting each instruction's
+``Sparse PC Inc`` to jump over dead MACs.  The TPU-native analogue
+operates at MXU-tile granularity: the compiler (ops.py) compacts the
+block mask into a **jump table** of live (k, n) tile coordinates, and
+the kernel's grid walks only that list — dead tiles cost neither FLOPs
+nor HBM traffic, exactly like skipped CAL instructions.
+
+Mechanics: the coordinate arrays ride in scalar-prefetch SMEM
+(``PrefetchScalarGridSpec``) so the pipeline can compute the *next*
+block's HBM addresses ahead of the MACs — RISC-NN's decoupled
+Instruction-Loader / CAL-unit split, literally.
+
+Within one output column j the live k-tiles are consecutive grid
+steps, so the output block stays VMEM-resident and psums never round-
+trip HBM (the ``first`` flag re-zeroes it when j advances).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(live_k, live_j, first, a_ref, b_ref, o_ref, acc_ref):
+    s = pl.program_id(1)
+
+    @pl.when(first[s] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+    # write-through every step: the last step of a j-run leaves the
+    # final psum in o (previous partial writes are dead stores that the
+    # pipeline keeps in VMEM while j is unchanged).
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_block_sparse(a: jax.Array, b: jax.Array,
+                        live_k: jax.Array, live_j: jax.Array,
+                        first: jax.Array,
+                        *, bm: int = 128, bn: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """C = A @ (B under block mask).
+
+    live_k/live_j: (n_live,) int32 tile coordinates, ordered so equal-j
+    runs are contiguous; first: (n_live,) int32, 1 at each j-run start.
+    Output blocks whose column has no live tile are zero.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    nm = m // bm
+    n_live = live_k.shape[0]
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nm, n_live),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, s, lk, lj, f: (i, lk[s])),
+            pl.BlockSpec((bk, bn), lambda i, s, lk, lj, f: (lk[s], lj[s])),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, s, lk, lj, f: (i, lj[s])),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        name="block_sparse_matmul",
+    )(live_k, live_j, first, a, b)

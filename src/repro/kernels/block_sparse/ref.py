@@ -1,0 +1,13 @@
+"""Oracle: dense matmul against the block-masked weights."""
+import jax.numpy as jnp
+
+
+def expand_mask(mask, bk, bn):
+    """(K/bk, N/bn) bool -> (K, N) elementwise bool."""
+    return jnp.repeat(jnp.repeat(mask, bk, axis=0), bn, axis=1)
+
+
+def matmul_block_sparse_ref(a, b, mask, bk, bn):
+    bm = expand_mask(mask, bk, bn)
+    return jnp.dot(a.astype(jnp.float32),
+                   jnp.where(bm, b, 0).astype(jnp.float32))

@@ -1,0 +1,98 @@
+"""Flash attention with decoupled LD/CAL staging (used by the LM archs).
+
+The online-softmax decomposition is the paper's ExeBlock discipline
+applied to attention: each (q-block, kv-block) pair is one ExeBlock —
+LD stages K/V tiles into VMEM, CAL runs the two MACs (scores, pv) plus
+the rescale chain, FLOW carries (m, l, acc) to the next block via VMEM
+scratch, and ST writes the normalized tile once at the end of the kv
+sweep (output-stationary, like All-Reuse).
+
+GQA is kept factored: the kv-head index map is ``q_head // group``, so
+K/V tiles are fetched once per kv head and *reused* across the group's
+q heads through pipeline copy-elision.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, nkv: int, bq: int, bkv: int, causal: bool, scale: float):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    if causal:
+        q_i = pl.program_id(1)
+        q_pos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == nkv - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 256, bkv: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, D); k/v: (BKV, Skv, D) with BH = BKV * group.
+
+    Heads are flattened into the leading dim; the kv index map divides
+    by the GQA group.  Returns (BH, Sq, D).
+    """
+    bh, sq, d = q.shape
+    bkvh, skv, _ = k.shape
+    assert bh % bkvh == 0
+    group = bh // bkvh
+    assert sq % bq == 0 and skv % bkv == 0
+    nq, nkv = sq // bq, skv // bkv
+    scale = 1.0 / math.sqrt(d)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nkv=nkv, bq=bq, bkv=bkv,
+                          causal=causal, scale=scale),
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, d), jnp.float32),     # accumulator
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

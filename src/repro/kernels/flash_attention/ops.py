@@ -1,0 +1,30 @@
+"""jit'd wrapper: (B, S, H, D) layout -> kernel layout and back."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref  # noqa: F401
+
+__all__ = ["attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
+                                             "interpret"))
+def attention(q, k, v, *, causal: bool = True, bq: int = 256,
+              bkv: int = 256, interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], d)
+    # kernel maps q head -> kv head by h // group within one batch item:
+    # flatten batch-major so the division stays aligned
+    out = flash_attention(qf, kf, vf, causal=causal,
+                          bq=min(bq, sq), bkv=min(bkv, k.shape[1]),
+                          interpret=interpret)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

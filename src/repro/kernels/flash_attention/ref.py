@@ -1,0 +1,21 @@
+"""Oracle: exact softmax attention in f32."""
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    bh, sq, d = q.shape
+    bkvh = k.shape[0]
+    group = bh // bkvh
+    kf = jnp.repeat(k, group, axis=0).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=0).astype(jnp.float32)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(d)
+    if causal:
+        skv = k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, vf).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .kernel import Dataflow, matmul_dataflow  # noqa: F401
+from .ops import matmul, modeled_traffic  # noqa: F401
+from .ref import matmul_ref  # noqa: F401

@@ -1,0 +1,152 @@
+"""Dataflow-parameterized tiled matmul (paper §5.2 on the MXU).
+
+The RISC-NN claim is that *programmable data movement* — not new
+arithmetic — is what buys efficiency: the same MACs under five reuse
+schedules differ by 38x in DRAM traffic (Table 6).  On TPU the analogue
+of "which operand stays in the PE's Operand RAM" is "which operand's
+VMEM block survives consecutive grid steps": Pallas's pipeline skips
+the HBM->VMEM copy whenever the BlockSpec index_map returns the same
+block index as the previous step.  So the **grid iteration order + the
+index maps are the dataflow program**:
+
+    OUTPUT_STATIONARY  (paper: All Reuse)    grid (m, n, k), k inner —
+        the f32 accumulator lives in VMEM scratch; C written once.
+    WEIGHT_STATIONARY  (paper: Filter Reuse) grid (n, k, m), m inner —
+        the B (weight) block survives the whole m sweep; C revisited.
+    INPUT_STATIONARY   (paper: Ifmap Reuse)  grid (m, k, n), n inner —
+        the A (ifmap) block survives the n sweep; C revisited.
+    NO_REUSE           (paper: No Reuse)     grid (k, m, n) — no block
+        survives consecutive steps; every operand re-streamed.
+
+All four compute identical values (tests assert allclose against
+``ref.matmul_ref``); they differ only in modeled HBM traffic
+(``ops.modeled_traffic``), which reproduces the paper's Table-6
+*ordering* on MXU tiles.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+class Dataflow(enum.Enum):
+    OUTPUT_STATIONARY = "output_stationary"   # paper: All Reuse
+    WEIGHT_STATIONARY = "weight_stationary"   # paper: Filter Reuse
+    INPUT_STATIONARY = "input_stationary"     # paper: Ifmap Reuse
+    NO_REUSE = "no_reuse"                     # paper: No Reuse
+
+
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    """Output-stationary: accumulate in VMEM scratch, write C once."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _revisit_kernel(a_ref, b_ref, o_ref, *, k_axis: int):
+    """Weight-/input-stationary/no-reuse: C revisited across k (psum
+    read-modify-write through the pipeline, like the paper's psum LD/ST
+    chains)."""
+    k = pl.program_id(k_axis)
+    part = jnp.dot(a_ref[...], b_ref[...],
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _first():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(k != 0)
+    def _rest():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + part
+                      ).astype(o_ref.dtype)
+
+
+def matmul_dataflow(a: jax.Array, b: jax.Array,
+                    dataflow: Dataflow = Dataflow.OUTPUT_STATIONARY,
+                    *, bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = False,
+                    out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """C = A @ B under the selected dataflow.  Shapes must tile evenly
+    (the wrapper in ops.py pads)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (a.shape, b.shape, bm, bn, bk)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, jnp.float32)
+    out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+
+    if dataflow is Dataflow.OUTPUT_STATIONARY:
+        return pl.pallas_call(
+            functools.partial(_os_kernel, nk=nk),
+            grid=(nm, nn, nk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            out_shape=out_shape,
+            interpret=interpret,
+            name="gemm_output_stationary",
+        )(a, b)
+
+    if dataflow is Dataflow.WEIGHT_STATIONARY:
+        # grid (n, k, m): B block index (kk, j) constant across inner m
+        return pl.pallas_call(
+            functools.partial(_revisit_kernel, k_axis=1),
+            grid=(nn, nk, nm),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)),
+            out_shape=out_shape,
+            interpret=interpret,
+            name="gemm_weight_stationary",
+        )(a, b)
+
+    if dataflow is Dataflow.INPUT_STATIONARY:
+        # grid (m, k, n): A block index (i, kk) constant across inner n
+        return pl.pallas_call(
+            functools.partial(_revisit_kernel, k_axis=1),
+            grid=(nm, nk, nn),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
+            out_shape=out_shape,
+            interpret=interpret,
+            name="gemm_input_stationary",
+        )(a, b)
+
+    # NO_REUSE: k outermost — every step changes every block index
+    return pl.pallas_call(
+        functools.partial(_revisit_kernel, k_axis=0),
+        grid=(nk, nm, nn),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda kk, i, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda kk, i, j: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda kk, i, j: (i, j)),
+        out_shape=out_shape,
+        interpret=interpret,
+        name="gemm_no_reuse",
+    )(a, b)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the dataflow matmul."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, jnp.float32)
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(out_dtype)

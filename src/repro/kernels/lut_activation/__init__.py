@@ -1,0 +1,3 @@
+from .kernel import lut_activation, quantize_u16, LUT_ENTRIES  # noqa: F401
+from .ops import apply_lut, table_for, TABLES  # noqa: F401
+from .ref import build_table, lut_ref  # noqa: F401

@@ -1,0 +1,55 @@
+"""LUT activation — the paper's In-DRAM Table Loader (§3.9) on TPU.
+
+RISC-NN keeps its ISA free of transcendentals: an ST instruction with a
+non-zero ``In-DRAM Lookup Type`` routes the stored value through a
+2^16-entry table at the memory controller.  TPUs run no logic in the
+memory controller, so the adaptation moves the lookup to the **store
+path of the kernel epilogue**: values are quantized to the paper's
+16-bit grid and gathered from the table while still VMEM-resident —
+the same accuracy contract (exact for 16-bit inputs), one level higher
+in the memory hierarchy (deviation recorded in DESIGN.md).
+
+The table block (65536 x 4B = 256 KB) is fetched once and survives all
+grid steps (constant index_map) — table reuse is free, as in DRAM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: quantization grid of core/lut.py (paper: 16-bit fixed point in [-8, 8))
+LUT_LO, LUT_HI, LUT_ENTRIES = -8.0, 8.0, 1 << 16
+_STEP = (LUT_HI - LUT_LO) / LUT_ENTRIES
+
+
+def quantize_u16(x):
+    q = jnp.clip(jnp.round((x - LUT_LO) / _STEP), 0, LUT_ENTRIES - 1)
+    return q.astype(jnp.int32)
+
+
+def _kernel(x_ref, table_ref, o_ref):
+    idx = quantize_u16(x_ref[...].astype(jnp.float32))
+    o_ref[...] = jnp.take(table_ref[...], idx, axis=0)
+
+
+def lut_activation(x: jax.Array, table: jax.Array, *, bm: int = 256,
+                   bn: int = 256, interpret: bool = False) -> jax.Array:
+    """y = table[quantize(x)] elementwise; x: (M, N), table: (65536,)."""
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)
+    assert table.shape == (LUT_ENTRIES,), table.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((LUT_ENTRIES,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+        name="lut_activation",
+    )(x, table)

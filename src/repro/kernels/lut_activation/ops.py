@@ -1,0 +1,50 @@
+"""jit'd wrapper with named activation tables (paper Table 4's
+"unnecessary" CISC ops — complex Activate, VEXP, VLOG, VDV — become
+lookup types, matching core/lut.py)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lut_activation, LUT_ENTRIES
+from .ref import build_table, lut_ref  # noqa: F401
+
+__all__ = ["apply_lut", "table_for", "TABLES"]
+
+TABLES = {
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "exp": jnp.exp,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "sqrt": lambda x: jnp.sqrt(jnp.maximum(x, 0.0)),
+    "recip": lambda x: jnp.where(jnp.abs(x) < 1e-4, 0.0, 1.0 / x),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def table_for(name: str):
+    return build_table(TABLES[name])
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def apply_lut(x, name: str, *, bm: int = 256, bn: int = 256,
+              interpret: bool = False):
+    """Elementwise activation through the 2^16-entry table."""
+    table = table_for(name)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    m, n = x2.shape
+    x2 = _pad_to(x2, bm, bn)
+    out = lut_activation(x2, table, bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n].reshape(shape)

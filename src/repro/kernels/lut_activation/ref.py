@@ -1,0 +1,20 @@
+"""Oracle: same quantize-then-gather in plain jnp (and the exact
+function for accuracy bounds)."""
+import jax.numpy as jnp
+
+from .kernel import LUT_ENTRIES, LUT_HI, LUT_LO
+
+_STEP = (LUT_HI - LUT_LO) / LUT_ENTRIES
+
+
+def lut_ref(x, table):
+    q = jnp.clip(jnp.round((x.astype(jnp.float32) - LUT_LO) / _STEP),
+                 0, LUT_ENTRIES - 1).astype(jnp.int32)
+    return jnp.take(table, q, axis=0)
+
+
+def build_table(fn):
+    """Tabulate fn over the 2^16-entry grid (paper §3.9)."""
+    grid = LUT_LO + ( jnp.arange(LUT_ENTRIES, dtype=jnp.float32) + 0.0) \
+        * _STEP
+    return fn(grid).astype(jnp.float32)

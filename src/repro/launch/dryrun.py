@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (arch x shape x mesh) cell this lowers + compiles the real
+step function (train_step / prefill / serve_step) against
+ShapeDtypeStruct stand-ins on the production mesh, then records:
+
+* ``memory_analysis``  — per-device bytes (proves HBM fit),
+* ``cost_analysis``    — XLA's per-device FLOPs/bytes (loop bodies x1),
+* loop-aware FLOPs/bytes/collective traffic from ``hlo_cost`` (the
+  roofline inputs),
+* the collective schedule by kind.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+        --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs
+from repro.configs import SHAPES, shape_by_name
+from repro.data.specs import train_specs, train_axes, decode_token_specs
+from repro.launch import hlo_cost
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import build_model
+from repro.models.base import ParamSpec, abstract_params
+from repro.sharding import DEFAULT_RULES, logical_spec, tree_shardings
+from repro.train.optimizer import OptConfig, opt_state_specs
+from repro.train.step import auto_microbatches, make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _shardings_for(spec_tree, mesh, rules=DEFAULT_RULES):
+    return tree_shardings(spec_tree, mesh, rules)
+
+
+def _batch_shardings(cfg, batch, seq, mesh, rules=DEFAULT_RULES):
+    specs = train_specs(cfg, batch, seq)
+    axes = train_axes(cfg, batch, seq)
+    return specs, {
+        k: NamedSharding(mesh, logical_spec(axes[k], v.shape, mesh, rules))
+        for k, v in specs.items()}
+
+
+def apply_overrides(cfg, overrides: dict):
+    """dataclasses.replace with string-typed values from --set k=v."""
+    import dataclasses
+    typed = {}
+    for k, v in overrides.items():
+        field = {f.name: f for f in dataclasses.fields(cfg)}[k]
+        t = field.type
+        if t in ("int", int):
+            typed[k] = int(v)
+        elif t in ("float", float):
+            typed[k] = float(v)
+        elif t in ("bool", bool):
+            typed[k] = v in ("1", "true", "True")
+        else:
+            typed[k] = v
+    return dataclasses.replace(cfg, **typed)
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, rules=DEFAULT_RULES,
+                    cfg=None):
+    """Returns (jitted_fn, abstract_args, meta)."""
+    cfg = cfg or configs.get(arch)
+    shape = shape_by_name(shape_name)
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    pshard = _shardings_for(pspecs, mesh, rules)
+    pabs = abstract_params(pspecs)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind}
+
+    if shape.kind == "train":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = sizes.get("pod", 1) * sizes.get("data", 1)
+        n_micro = auto_microbatches(cfg, shape.global_batch, shape.seq_len,
+                                    dp)
+        meta["n_micro"] = n_micro
+        opt = OptConfig(keep_master=(cfg.param_dtype != "float32"))
+        step = make_train_step(model, cfg, opt=opt, n_micro=n_micro)
+        ospecs = opt_state_specs(pspecs, opt)
+        oshard = _shardings_for(ospecs, mesh, rules)
+        oabs = abstract_params(ospecs)
+        bspecs, bshard = _batch_shardings(cfg, shape.global_batch,
+                                          shape.seq_len, mesh, rules)
+        fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None))
+        return fn, (pabs, oabs, bspecs), meta
+
+    if shape.kind == "prefill":
+        bspecs, bshard = _batch_shardings(cfg, shape.global_batch,
+                                          shape.seq_len, mesh, rules)
+        cshard = _shardings_for(model.cache_specs(shape.global_batch,
+                                                  shape.seq_len), mesh, rules)
+        lshard = NamedSharding(mesh, logical_spec(
+            ("batch", "act_vocab"), (shape.global_batch, cfg.vocab_size),
+            mesh, rules))
+        fn = jax.jit(model.prefill, in_shardings=(pshard, bshard),
+                     out_shardings=(lshard, cshard))
+        return fn, (pabs, bspecs), meta
+
+    # decode
+    cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+    cshard = _shardings_for(cspecs, mesh, rules)
+    cabs = abstract_params(cspecs)
+    tok_sds, tok_axes = decode_token_specs(cfg, shape.global_batch)
+    tshard = NamedSharding(mesh, logical_spec(tok_axes, tok_sds.shape,
+                                              mesh, rules))
+    lshard = NamedSharding(mesh, logical_spec(
+        ("batch", "act_vocab"), (shape.global_batch, cfg.vocab_size),
+        mesh, rules))
+    fn = jax.jit(model.decode_step, in_shardings=(pshard, cshard, tshard),
+                 out_shardings=(lshard, cshard))
+    return fn, (pabs, cabs, tok_sds), meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rules=DEFAULT_RULES, cfg=None, tag: str = "") -> dict:
+    from repro.sharding import set_active_rules
+    set_active_rules(rules)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    world = mesh.devices.size
+    t0 = time.time()
+    fn, args, meta = build_lowerable(arch, shape_name, mesh, rules, cfg=cfg)
+    with mesh:
+        lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    cost = hlo_cost.analyze_module(txt, world)
+
+    cfg = cfg or configs.get(arch)
+    shape = shape_by_name(shape_name)
+    n_params = cfg.n_params()
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    factor = 6 if shape.kind == "train" else 2
+    model_flops_global = factor * n_active * tokens
+    model_flops_dev = model_flops_global / world
+
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    t_compute = cost.flops / HW.peak_flops_bf16
+    t_memory = cost.bytes / HW.hbm_bw
+    t_coll = cost.coll_total / HW.ici_link_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "world": world, **meta, "tag": tag,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev_bytes,
+            "hbm_budget_bytes": HW.hbm_bytes,
+            "fits": bool(per_dev_bytes <= HW.hbm_bytes),
+        },
+        "xla_cost_analysis": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "loop_aware": {
+            "flops": cost.flops,
+            "bytes": cost.bytes,
+            "transcendentals": cost.transcendentals,
+            "collective_bytes": cost.coll_bytes,
+            "collective_ops": cost.coll_ops,
+            "collective_total_bytes": cost.coll_total,
+        },
+        "model_flops": {
+            "n_params": n_params, "n_active_params": n_active,
+            "global": model_flops_global, "per_device": model_flops_dev,
+            "useful_ratio": (model_flops_dev / cost.flops
+                             if cost.flops else 0.0),
+        },
+        "roofline": {
+            **terms,
+            "bottleneck": bottleneck.replace("_s", ""),
+            "step_time_s": max(terms.values()),
+            "roofline_fraction": (t_compute / max(terms.values())
+                                  if max(terms.values()) > 0 else 0.0),
+            "model_fraction": (model_flops_dev / HW.peak_flops_bf16
+                               / max(terms.values())
+                               if max(terms.values()) > 0 else 0.0),
+        },
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="config override key=value (e.g. loss_chunk=512)")
+    ap.add_argument("--rules", default="default",
+                    help="sharding-rules variant (default | sp)")
+    ap.add_argument("--variant", default=None,
+                    help="'opt' applies configs.OPT_SETTINGS per arch")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.overrides)
+    from repro.sharding import RULE_VARIANTS
+    rules = RULE_VARIANTS[args.rules]
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        todo = [(a, s.name) for a, s, skip in configs.cells()
+                if skip is None]
+        skips = [(a, s.name, skip) for a, s, skip in configs.cells()
+                 if skip is not None]
+        (out / "skips.json").write_text(json.dumps(
+            [{"arch": a, "shape": s, "reason": r} for a, s, r in skips],
+            indent=2))
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in todo:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape}__{mesh_kind}"
+            if args.tag != "baseline":
+                name += f"__{args.tag}"
+            path = out / f"{name}.json"
+            if args.skip_existing and path.exists():
+                print(f"[skip] {name}")
+                continue
+            try:
+                cell_over, cell_rules = dict(overrides), rules
+                if args.variant == "opt":
+                    ov, rv = configs.opt_settings_for(arch, shape)
+                    cell_over = {**ov, **cell_over}
+                    cell_rules = RULE_VARIANTS[rv]
+                cfg = apply_overrides(configs.get(arch), cell_over) \
+                    if cell_over else None
+                res = run_cell(arch, shape, mesh_kind, tag=args.tag,
+                               cfg=cfg, rules=cell_rules)
+                path.write_text(json.dumps(res, indent=2))
+                r = res["roofline"]
+                m = res["memory"]
+                print(f"[ok] {name}: bottleneck={r['bottleneck']} "
+                      f"step={r['step_time_s']:.4f}s "
+                      f"frac={r['model_fraction']:.3f} "
+                      f"mem={m['per_device_bytes']/1e9:.2f}GB "
+                      f"fits={m['fits']} compile={res['compile_s']:.0f}s",
+                      flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {name}: {type(e).__name__}: {e}",
+                      flush=True)
+                (out / f"{name}.error.txt").write_text(
+                    traceback.format_exc())
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Collective-traffic extraction from optimized (post-SPMD) HLO text.
+
+``cost_analysis`` gives per-device FLOPs and bytes but not collective
+traffic; we parse ``compiled.as_text()`` and sum, per collective kind,
+the bytes each device puts on the interconnect:
+
+    all-reduce         2 * size * (n-1)/n      (ring RS+AG)
+    all-gather         size_out * (n-1)/n
+    reduce-scatter     size_in  * (n-1)/n  (= size_out * (n-1))
+    all-to-all         size * (n-1)/n
+    collective-permute size
+
+where n is the replica-group size parsed from the op (falling back to
+the world size).  Shapes are the op's *result* shape — per-device in
+post-SPMD HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable
+
+__all__ = ["CollectiveStats", "parse_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[16,512]{1,0} all-gather(%p), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+# tuple-result ops:  (bf16[..], bf16[..]) all-to-all(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*(?:\},?\{[^}]*)*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n * b)
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:            # iota form: [num_groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [t for t in first.replace("{", "").split(",") if t.strip()]
+        if ids:
+            return len(ids)
+    return world
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: Dict[str, int]
+    bytes_by_kind: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_lines: Iterable[str], world: int
+                      ) -> CollectiveStats:
+    ops = {k: 0 for k in _COLL_KINDS}
+    link_bytes = {k: 0.0 for k in _COLL_KINDS}
+    for line in hlo_lines:
+        if "-start" in line or any(k in line for k in _COLL_KINDS):
+            m = _OP_RE.search(line)
+            sizes = []
+            kind = None
+            if m:
+                kind = m.group(3)
+                sizes = [_shape_bytes(m.group(1), m.group(2))]
+            else:
+                mt = _TUPLE_RE.search(line)
+                if mt:
+                    kind = mt.group(2)
+                    sizes = [_shape_bytes(d, s)
+                             for d, s in _SHAPE_RE.findall(mt.group(1))]
+            if kind is None:
+                continue
+            kind = kind.replace("-start", "")
+            if kind.endswith("-done"):
+                continue
+            n = _group_size(line, world)
+            size = sum(sizes)
+            if kind == "all-reduce":
+                moved = 2.0 * size * (n - 1) / n
+            elif kind == "all-gather":
+                moved = size * (n - 1) / n
+            elif kind == "reduce-scatter":
+                moved = size * (n - 1)          # result is 1/n of input
+            elif kind == "all-to-all":
+                moved = size * (n - 1) / n
+            else:                               # collective-permute
+                moved = size
+            ops[kind] += 1
+            link_bytes[kind] += moved
+    return CollectiveStats(ops=ops, bytes_by_kind=link_bytes)

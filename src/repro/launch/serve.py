@@ -1,0 +1,57 @@
+"""Batched-serving launcher: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import SyntheticPipeline
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.serve.step import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke if args.smoke else configs.get)(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = SyntheticPipeline(cfg, batch=args.batch,
+                              seq=args.prompt_len).device_batch(0)
+
+    prefill = jax.jit(make_prefill_step(model))
+    step = jax.jit(make_decode_step(model))
+    t0 = time.time()
+    last, cache = prefill(params, batch)
+    tok = np.argmax(np.asarray(last), -1).astype(np.int32)[:, None]
+    t_prefill = time.time() - t0
+    out = [tok]
+    t0 = time.time()
+    tok = jax.numpy.asarray(tok)
+    for _ in range(args.gen - 1):
+        tok, cache = step(params, cache, tok)
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.concatenate(out, axis=1)
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
+          f"decoded {args.gen} tokens/seq in {dt:.2f}s "
+          f"({args.batch * args.gen / max(dt, 1e-9):.1f} tok/s)")
+    print("generated ids (first seq):", gen[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

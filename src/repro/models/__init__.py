@@ -1,0 +1,10 @@
+from .base import ParamSpec, init_params, abstract_params  # noqa: F401
+from .lm import DecoderLM  # noqa: F401
+from .whisper import WhisperModel  # noqa: F401
+
+
+def build_model(cfg):
+    """Dispatch a ModelConfig to its model class."""
+    if cfg.is_encoder_decoder:
+        return WhisperModel(cfg)
+    return DecoderLM(cfg)

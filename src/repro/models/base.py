@@ -1,0 +1,98 @@
+"""Parameter-spec machinery shared by the model zoo.
+
+A model's parameters are declared once as a pytree of :class:`ParamSpec`
+(shape + dtype + logical axes + initializer).  From that single source
+of truth we derive:
+
+* ``init_params``     — concrete initialization (PRNG-splitting per leaf),
+* ``abstract_params`` — ``ShapeDtypeStruct`` stand-ins for the dry-run,
+* sharding trees      — via :func:`repro.sharding.tree_shardings`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "normal", "zeros",
+           "ones", "const"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                     # logical dim names, same rank as shape
+    dtype: jnp.dtype = jnp.float32
+    init: Optional[Callable] = None  # (key, shape, dtype) -> array
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"rank mismatch: {self.shape} vs {self.axes}")
+
+
+def normal(stddev: float) -> Callable:
+    def f(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return f
+
+
+def fan_in(shape: Sequence[int]) -> Callable:
+    """Truncated-normal with 1/sqrt(fan_in) scale (fan_in = dim 0 … or
+    dims up to the last for stacked expert weights)."""
+    fi = math.prod(shape[:-1]) if len(shape) > 1 else shape[0]
+    return normal(1.0 / math.sqrt(max(fi, 1)))
+
+
+def zeros(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def const(v: float) -> Callable:
+    def f(key, shape, dtype):
+        return jnp.full(shape, v, dtype)
+    return f
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, rng: jax.Array):
+    """Initialize a ParamSpec tree.  Splits the key deterministically per
+    leaf path so layer stacking / reordering keeps leaves reproducible."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, ps in zip(keys, leaves):
+        init = ps.init
+        if init is None:
+            init = fan_in(ps.shape)
+        out.append(init(k, ps.shape, ps.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, ps.dtype),
+        spec_tree, is_leaf=_is_spec)
+
+
+def with_param_dtype(spec_tree, dtype):
+    """Retarget >=2D f32 params to ``dtype`` (bf16 storage + gathers;
+    1D norms/biases stay f32)."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float32:
+        return spec_tree
+
+    def retag(ps):
+        if ps.dtype == jnp.float32 and len(ps.shape) >= 2:
+            return dataclasses.replace(ps, dtype=dtype)
+        return ps
+    return jax.tree.map(retag, spec_tree, is_leaf=_is_spec)

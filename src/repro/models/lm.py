@@ -1,0 +1,381 @@
+"""Unified decoder-only LM covering the dense / MoE / hybrid / SSM / VLM
+architectures of the assigned pool.
+
+A model is a stack of blocks; each block is `mix` (attention, local
+attention, RG-LRU or RWKV time-mix) + `ffn` (SwiGLU / GELU MLP, MoE, or
+RWKV channel-mix), pre-normed with residual adds.  Homogeneous stacks
+are `lax.scan`'d over stacked parameters (compile-time O(1) in depth —
+mandatory for the 80-layer config under 512-way SPMD); heterogeneous
+stacks (recurrentgemma's 1:2 pattern, DeepSeek's leading dense layer)
+unroll.
+
+Three entry points, matching the assigned input shapes:
+
+* ``apply``       — logits over a full sequence (training fwd).
+* ``prefill``     — same math + returns a decode cache.
+* ``decode_step`` — one token against the cache (serve_step).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constrain
+from .base import ParamSpec, init_params, abstract_params
+from . import components as C
+from . import rglru as R
+from . import rwkv6 as W
+
+__all__ = ["DecoderLM"]
+
+
+def _stack_specs(spec_tree, n: int):
+    """Prefix every leaf with a stacked ("layers",) axis."""
+    return jax.tree.map(
+        lambda ps: ParamSpec((n,) + ps.shape, ("layers",) + ps.axes,
+                             ps.dtype, ps.init),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class DecoderLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        kinds = cfg.layer_kinds
+        first_dense = cfg.moe.first_dense if cfg.moe else 0
+        # scan when every layer is structurally identical
+        self.scanned = len(set(kinds)) == 1 and first_dense in (0,)
+        self.first_dense = first_dense
+        if first_dense:
+            self.scanned = len(set(kinds[first_dense:])) == 1
+        self.kinds = kinds
+
+    # ------------------------------------------------------------------
+    # parameter specs
+    # ------------------------------------------------------------------
+    def _block_specs(self, kind: str, use_moe: bool,
+                     dense_ff: Optional[int] = None) -> dict:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"ln1": C.norm_specs(cfg.d_model, cfg.norm_kind)}
+        if kind in ("attn", "local_attn"):
+            s["mix"] = C.attn_specs(cfg)
+        elif kind == "rglru":
+            s["mix"] = R.rglru_block_specs(cfg)
+        elif kind == "rwkv":
+            s["mix"] = W.rwkv_time_specs(cfg)
+        else:
+            raise ValueError(kind)
+        s["ln2"] = C.norm_specs(cfg.d_model, cfg.norm_kind)
+        if kind == "rwkv":
+            s["ffn"] = W.rwkv_ffn_specs(cfg)
+        elif use_moe:
+            s["ffn"] = C.moe_specs(cfg)
+        else:
+            s["ffn"] = C.mlp_specs(cfg, dense_ff)
+        return s
+
+    def _layer_uses_moe(self, i: int) -> bool:
+        return self.cfg.moe is not None and i >= self.first_dense
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs = self._param_specs_f32()
+        from .base import with_param_dtype
+        return with_param_dtype(specs, cfg.param_dtype)
+
+    def _param_specs_f32(self) -> dict:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": C.embed_specs(cfg),
+            "final_norm": C.norm_specs(cfg.d_model, cfg.norm_kind),
+        }
+        if self.scanned:
+            n = cfg.n_layers - self.first_dense
+            body = self._block_specs(self.kinds[-1],
+                                     cfg.moe is not None)
+            specs["layers"] = _stack_specs(body, n)
+            for i in range(self.first_dense):
+                specs[f"dense_layer_{i}"] = self._block_specs(
+                    self.kinds[i], False, cfg.moe.dense_d_ff)
+        else:
+            for i, kind in enumerate(self.kinds):
+                specs[f"layer_{i:02d}"] = self._block_specs(
+                    kind, self._layer_uses_moe(i))
+        return specs
+
+    def init(self, rng: jax.Array):
+        return init_params(self.param_specs(), rng)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # block application
+    # ------------------------------------------------------------------
+    def _apply_block(self, kind: str, use_moe: bool, p, x, *,
+                     positions, mrope_positions, cache, cache_pos, train):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = C.apply_norm(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        new_cache: Dict[str, Any] = {}
+        if kind in ("attn", "local_attn"):
+            window = cfg.local_window if kind == "local_attn" else None
+            mix, kv = C.attention_block(
+                p["mix"], h, cfg, positions=positions, window=window,
+                mrope_positions=mrope_positions,
+                cache=None if cache is None else cache["kv"],
+                cache_pos=cache_pos)
+            if window is not None and cache is None:       # prefill->ring
+                kv = {"k": kv["k"][:, -window:], "v": kv["v"][:, -window:]}
+            new_cache["kv"] = kv
+        elif kind == "rglru":
+            mix, rec = R.rglru_block(
+                p["mix"], h, cfg,
+                state=None if cache is None else cache["rec"])
+            new_cache["rec"] = rec
+        else:  # rwkv
+            mix, att = W.rwkv_time_block(
+                p["mix"], h, cfg,
+                state=None if cache is None else cache["att"])
+            new_cache["att"] = att
+        x = x + mix
+        h2 = C.apply_norm(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+        if kind == "rwkv":
+            f, ffn = W.rwkv_channel_block(
+                p["ffn"], h2, cfg,
+                state=None if cache is None else cache["ffn"])
+            new_cache["ffn"] = ffn
+        elif use_moe:
+            f, aux = C.moe_block(p["ffn"], h2, cfg)
+        else:
+            f = C.mlp_block(p["ffn"], h2, cfg)
+        x = x + f
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        return x, aux, new_cache
+
+    # ------------------------------------------------------------------
+    # forward entry points
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch, dtype):
+        cfg = self.cfg
+        x = C.embed_tokens(params["embed"], batch["tokens"], cfg, dtype)
+        if cfg.n_patches and "patch_embeds" in batch:
+            # VLM stub frontend: precomputed patch embeddings replace the
+            # leading placeholder tokens (brief: frontend is a stub).
+            pe = batch["patch_embeds"].astype(dtype)
+            x = lax.dynamic_update_slice(x, pe, (0, 0, 0))
+        return x
+
+    def _positions(self, batch):
+        B, S = batch["tokens"].shape
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                   (B, S))
+        return pos
+
+    def apply(self, params, batch, *, train: bool = True,
+              want_cache: bool = False, want_hidden: bool = False):
+        """Full-sequence forward.  Returns (logits, aux_dict); with
+        ``want_hidden`` returns the final-norm hidden states instead of
+        logits (the chunked-loss path never materializes (B,S,V))."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = self._embed_inputs(params, batch, dtype)
+        positions = self._positions(batch)
+        mrope = batch.get("mrope_positions")
+        aux_total = jnp.zeros((), jnp.float32)
+        caches: Dict[str, Any] = {}
+
+        # leading unscanned dense layers (DeepSeek pattern)
+        for i in range(self.first_dense):
+            blk = functools.partial(
+                self._apply_block, self.kinds[i], False,
+                positions=positions, mrope_positions=mrope,
+                cache=None, cache_pos=None, train=train)
+            if train and cfg.remat == "full":
+                blk = jax.checkpoint(blk)
+            x, aux, c = blk(params[f"dense_layer_{i}"], x)
+            aux_total += aux
+            caches[f"dense_layer_{i}"] = c
+
+        if self.scanned:
+            kind = self.kinds[-1]
+            use_moe = cfg.moe is not None
+
+            def body(x, lp):
+                y, aux, c = self._apply_block(
+                    kind, use_moe, lp, x, positions=positions,
+                    mrope_positions=mrope, cache=None, cache_pos=None,
+                    train=train)
+                if not want_cache:
+                    c = None
+                return y, (aux, c)
+
+            if train and cfg.remat == "full":
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            x, (auxs, cs) = lax.scan(body, x, params["layers"])
+            aux_total += auxs.sum()
+            if want_cache:
+                caches["layers"] = cs
+        else:
+            for i in range(self.first_dense, cfg.n_layers):
+                blk = functools.partial(
+                    self._apply_block, self.kinds[i], self._layer_uses_moe(i),
+                    positions=positions, mrope_positions=mrope,
+                    cache=None, cache_pos=None, train=train)
+                if train and cfg.remat == "full":
+                    blk = jax.checkpoint(blk)
+                x, aux, c = blk(params[f"layer_{i:02d}"], x)
+                aux_total += aux
+                caches[f"layer_{i:02d}"] = c
+
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        out_aux = {"moe_aux": aux_total}
+        if want_hidden:
+            return x, out_aux
+        logits = C.unembed(params["embed"], x, cfg)
+        if want_cache:
+            caches["pos"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+            return logits, out_aux, caches
+        return logits, out_aux
+
+    def prefill(self, params, batch, *, max_len: Optional[int] = None):
+        """Forward + decode cache (the ``prefill_*`` shapes).  Returns
+        (last-token logits, cache).  ``max_len`` > prompt length pads
+        the full-attention KV caches with decode headroom (ring-buffer
+        and recurrent states are fixed-size and need none)."""
+        logits, _, cache = self.apply(params, batch, train=False,
+                                      want_cache=True)
+        S = batch["tokens"].shape[1]
+        if max_len is not None and max_len > S:
+            cache = self._pad_cache(cache, max_len - S)
+        return logits[:, -1], cache
+
+    def _pad_cache(self, cache, extra: int):
+        cfg = self.cfg
+
+        def pad_kv(kv, axis):
+            pad = [(0, 0)] * kv["k"].ndim
+            pad[axis] = (0, extra)
+            return {n: jnp.pad(kv[n], pad) for n in ("k", "v")}
+
+        out = dict(cache)
+        if self.scanned and self.kinds[-1] == "attn":
+            out["layers"] = dict(cache["layers"])
+            out["layers"]["kv"] = pad_kv(cache["layers"]["kv"], axis=2)
+        elif not self.scanned:
+            for i in range(self.first_dense, cfg.n_layers):
+                name = f"layer_{i:02d}"
+                if self.kinds[i] == "attn":
+                    out[name] = dict(cache[name])
+                    out[name]["kv"] = pad_kv(cache[name]["kv"], axis=1)
+        for i in range(self.first_dense):         # leading dense layers
+            name = f"dense_layer_{i}"
+            if self.kinds[i] == "attn":
+                out[name] = dict(cache[name])
+                out[name]["kv"] = pad_kv(cache[name]["kv"], axis=1)
+        return out
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _block_cache_specs(self, kind: str, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        if kind == "attn":
+            shp = (batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+            ax = ("batch", "kv_seq", "act_heads", None)
+            return {"kv": {"k": ParamSpec(shp, ax, jnp.bfloat16),
+                           "v": ParamSpec(shp, ax, jnp.bfloat16)}}
+        if kind == "local_attn":
+            w = min(cfg.local_window, seq_len)
+            shp = (batch, w, cfg.n_kv_heads, cfg.head_dim)
+            ax = ("batch", "kv_seq", "act_heads", None)
+            return {"kv": {"k": ParamSpec(shp, ax, jnp.bfloat16),
+                           "v": ParamSpec(shp, ax, jnp.bfloat16)}}
+        if kind == "rglru":
+            return {"rec": R.rglru_state_specs(cfg, batch)}
+        if kind == "rwkv":
+            s = W.rwkv_state_specs(cfg, batch)
+            return {
+                "att": {"shift": s["att_shift"], "wkv": s["wkv"]},
+                "ffn": {"shift": s["ffn_shift"]},
+            }
+        raise ValueError(kind)
+
+    def cache_specs(self, batch: int, seq_len: int) -> dict:
+        """ParamSpec tree for a decode cache of capacity ``seq_len``."""
+        cfg = self.cfg
+        specs: Dict[str, Any] = {}
+        if self.scanned:
+            n = cfg.n_layers - self.first_dense
+            specs["layers"] = _stack_specs(
+                self._block_cache_specs(self.kinds[-1], batch, seq_len), n)
+            for i in range(self.first_dense):
+                specs[f"dense_layer_{i}"] = self._block_cache_specs(
+                    self.kinds[i], batch, seq_len)
+        else:
+            for i, kind in enumerate(self.kinds):
+                specs[f"layer_{i:02d}"] = self._block_cache_specs(
+                    kind, batch, seq_len)
+        specs["pos"] = ParamSpec((), (), jnp.int32)
+        return specs
+
+    def init_cache(self, batch: int, seq_len: int):
+        return jax.tree.map(
+            lambda ps: jnp.zeros(ps.shape, ps.dtype),
+            self.cache_specs(batch, seq_len),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def decode_step(self, params, cache, tokens):
+        """One decode step.  tokens: (B, 1).  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        pos = cache["pos"]                                  # scalar
+        B = tokens.shape[0]
+        batch = {"tokens": tokens,
+                 "positions": jnp.full((B, 1), pos, jnp.int32)}
+        if cfg.rope_kind == "mrope":
+            # text-only decode: all three m-rope ids advance with t
+            batch["mrope_positions"] = jnp.full((B, 3, 1), pos, jnp.int32)
+        x = self._embed_inputs(params, batch, dtype)
+        positions = batch["positions"]
+        mrope = batch.get("mrope_positions")
+        new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+        for i in range(self.first_dense):
+            x, _, c = self._apply_block(
+                self.kinds[i], False, params[f"dense_layer_{i}"], x,
+                positions=positions, mrope_positions=mrope,
+                cache=cache[f"dense_layer_{i}"], cache_pos=pos, train=False)
+            new_cache[f"dense_layer_{i}"] = c
+
+        if self.scanned:
+            kind = self.kinds[-1]
+            use_moe = cfg.moe is not None
+
+            def body(x, inp):
+                lp, lc = inp
+                y, _, c = self._apply_block(
+                    kind, use_moe, lp, x, positions=positions,
+                    mrope_positions=mrope, cache=lc, cache_pos=pos,
+                    train=False)
+                return y, c
+            x, cs = lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = cs
+        else:
+            for i in range(self.first_dense, cfg.n_layers):
+                x, _, c = self._apply_block(
+                    self.kinds[i], self._layer_uses_moe(i),
+                    params[f"layer_{i:02d}"], x, positions=positions,
+                    mrope_positions=mrope, cache=cache[f"layer_{i:02d}"],
+                    cache_pos=pos, train=False)
+                new_cache[f"layer_{i:02d}"] = c
+
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        logits = C.unembed(params["embed"], x, cfg)
+        return logits[:, 0], new_cache

@@ -1,0 +1,132 @@
+"""Griffin recurrent block: causal conv1d + RG-LRU (arXiv:2402.19427).
+
+The RG-LRU is a gated linear recurrence
+
+    r_t = sigmoid(x_t Wr + br)          (recurrence gate)
+    i_t = sigmoid(x_t Wi + bi)          (input gate)
+    log a_t = -c * softplus(L) * r_t    (c = 8, L learned)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+— a diagonal linear SSM, so training uses an O(log S) associative scan
+and decode is a single fused multiply-add per step (state = h only).
+This is the key sub-quadratic path for the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constrain
+from .base import ParamSpec, zeros, normal
+
+C_FACTOR = 8.0
+CONV_WIDTH = 4
+
+
+def rglru_block_specs(cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "w_gate": ParamSpec((d, w), ("embed", "ff")),
+        "w_in": ParamSpec((d, w), ("embed", "ff")),
+        "conv_w": ParamSpec((CONV_WIDTH, w), ("conv", "ff"),
+                            init=normal(0.1)),
+        "conv_b": ParamSpec((w,), ("stats",), init=zeros),
+        "wr": ParamSpec((w, w), ("ff", None)),
+        "br": ParamSpec((w,), ("stats",), init=zeros),
+        "wi": ParamSpec((w, w), ("ff", None)),
+        "bi": ParamSpec((w,), ("stats",), init=zeros),
+        # Lambda parameterized so a = sigmoid(L)^c spreads over (0.9, 0.999)
+        "lam": ParamSpec((w,), ("stats",),
+                         init=lambda k, s, d_: jax.random.uniform(
+                             k, s, jnp.float32, 0.38, 0.8).astype(d_)),
+        "w_out": ParamSpec((w, d), ("ff", "embed")),
+    }
+
+
+def _gates(p, x):
+    """x: (..., W) f32 -> (log_a, gated_x) both f32."""
+    r = jax.nn.sigmoid(x @ p["wr"].astype(jnp.float32)
+                       + p["br"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x @ p["wi"].astype(jnp.float32)
+                       + p["bi"].astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * x)
+    return log_a, gx
+
+
+def rglru_scan(p, x):
+    """x: (B,S,W) -> (B,S,W) via associative scan (training/prefill)."""
+    xf = x.astype(jnp.float32)
+    log_a, gx = _gates(p, xf)
+    a = jnp.exp(log_a)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = lax.associative_scan(combine, (a, gx), axis=1)
+    return h.astype(x.dtype), h[:, -1]                     # (out, final f32)
+
+
+def rglru_step(p, x, h_prev):
+    """x: (B,1,W); h_prev: (B,W) f32 -> (out (B,1,W), h (B,W))."""
+    xf = x[:, 0].astype(jnp.float32)
+    log_a, gx = _gates(p, xf)
+    h = jnp.exp(log_a) * h_prev + gx
+    return h[:, None].astype(x.dtype), h
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv, width CONV_WIDTH.
+
+    x: (B,S,W).  With ``state`` (B, CONV_WIDTH-1, W) runs one decode step
+    (S == 1) returning (y, new_state).
+    """
+    if state is not None:
+        buf = jnp.concatenate([state, x], axis=1)          # (B,4,W)
+        y = jnp.einsum("bkw,kw->bw", buf.astype(jnp.float32),
+                       w.astype(jnp.float32)) + b.astype(jnp.float32)
+        return y[:, None].astype(x.dtype), buf[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    frames = jnp.stack(
+        [pad[:, i:i + x.shape[1]] for i in range(CONV_WIDTH)], axis=2)
+    y = jnp.einsum("bskw,kw->bsw", frames.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x.dtype), None
+
+
+def rglru_block(p, x, cfg, *, state=None):
+    """Full Griffin recurrent block.
+
+    x: (B,S,D).  ``state`` (decode): {"conv": (B,3,W), "h": (B,W)}.
+    Returns (out (B,S,D), new_state | None).
+    """
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_in"].astype(x.dtype)
+    u = constrain(u, ("batch", None, "act_ff"))
+    if state is None:
+        u_raw = u
+        u, _ = causal_conv1d(u, p["conv_w"], p["conv_b"])
+        h, h_final = rglru_scan(p, u)
+        # prefill: expose the final recurrence + conv state (DCE'd in train)
+        new_state = {"conv": u_raw[:, -(CONV_WIDTH - 1):],
+                     "h": h_final}
+    else:
+        u, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"],
+                                      state=state["conv"])
+        h, h_new = rglru_step(p, u, state["h"])
+        new_state = {"conv": conv_state, "h": h_new}
+    out = (gate * h) @ p["w_out"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "act_embed")), new_state
+
+
+def rglru_state_specs(cfg, batch: int) -> dict:
+    w = cfg.lru_width
+    return {
+        "conv": ParamSpec((batch, CONV_WIDTH - 1, w), ("batch", None, "ff"),
+                          dtype=jnp.bfloat16),
+        "h": ParamSpec((batch, w), ("batch", "ff"), dtype=jnp.float32),
+    }

@@ -1,0 +1,215 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892): data-dependent decay WKV.
+
+Time-mixing is a linear recurrence over a matrix state per head
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (S: Dk x Dv)
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with per-channel, per-step decay w_t = exp(-exp(ww_t)) produced by a
+token-shifted low-rank projection of the input (the "data-dependent"
+part that distinguishes Finch from RWKV5).
+
+Training/prefill uses the **chunked-parallel** form (chunk = 32): an
+O(L^2) intra-chunk matrix plus an O(1)-state inter-chunk scan — this is
+the standard sub-quadratic schedule and the reason the 500k-token shape
+is feasible.  Exponent safety: ww is clamped to <= 1 so every within-
+chunk cumulative exponent is <= 31 * e < 88 (f32 exp range); all other
+exponents are <= 0 by construction.  Decode is a single FMA per step.
+
+The decoupled structure (stage the chunk operands, burst the MACs,
+carry S) is the paper's LD/CAL/FLOW staging; `kernels/wkv_chunk` is the
+Pallas version of the inner chunk kernel.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constrain
+from .base import ParamSpec, normal, zeros, ones
+
+TM_LORA = 32     # token-mix ddlerp low-rank dim
+DECAY_LORA = 64
+CHUNK = 32
+WW_CLAMP = 1.0   # ww <= 1  ->  per-step log-decay >= -e
+
+
+def rwkv_time_specs(cfg) -> dict:
+    d = cfg.d_model
+    h, dh = cfg.n_heads, cfg.head_dim
+    mu = lambda: ParamSpec((d,), ("stats",),  # noqa: E731
+                           init=lambda k, s, dt: jax.random.uniform(
+                               k, s, jnp.float32).astype(dt))
+    return {
+        "mu_x": mu(), "mu_w": mu(), "mu_k": mu(), "mu_v": mu(),
+        "mu_r": mu(), "mu_g": mu(),
+        "tm_w1": ParamSpec((d, 5 * TM_LORA), ("embed", None),
+                           init=normal(1e-3)),
+        "tm_w2": ParamSpec((5, TM_LORA, d), (None, None, "embed"),
+                           init=normal(1e-3)),
+        "w0": ParamSpec((d,), ("stats",),
+                        init=lambda k, s, dt: jnp.linspace(
+                            -6.0, -0.5, s[0]).astype(dt)),
+        "wd1": ParamSpec((d, DECAY_LORA), ("embed", None), init=normal(1e-3)),
+        "wd2": ParamSpec((DECAY_LORA, d), (None, "embed"), init=normal(1e-3)),
+        "wr": ParamSpec((d, h * dh), ("embed", "q_heads")),
+        "wk": ParamSpec((d, h * dh), ("embed", "q_heads")),
+        "wv": ParamSpec((d, h * dh), ("embed", "q_heads")),
+        "wg": ParamSpec((d, h * dh), ("embed", "q_heads")),
+        "wo": ParamSpec((h * dh, d), ("q_heads", "embed")),
+        "u": ParamSpec((h, dh), ("act_heads", None), init=normal(0.3)),
+        "ln_x_scale": ParamSpec((h, dh), ("act_heads", None), init=ones),
+        "ln_x_bias": ParamSpec((h, dh), ("act_heads", None), init=zeros),
+    }
+
+
+def rwkv_ffn_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    mu = lambda: ParamSpec((d,), ("stats",),  # noqa: E731
+                           init=lambda k, s, dt: jax.random.uniform(
+                               k, s, jnp.float32).astype(dt))
+    return {
+        "mu_k": mu(), "mu_r": mu(),
+        "wk": ParamSpec((d, f), ("embed", "ff")),
+        "wv": ParamSpec((f, d), ("ff", "embed")),
+        "wr": ParamSpec((d, d), ("embed", None)),
+    }
+
+
+def _shift(x, state):
+    """Token shift: returns x_{t-1} (zeros / carried state at t=0)."""
+    if state is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return state[:, None] if x.shape[1] == 1 else NotImplemented
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift mix -> (xw, xk, xv, xr, xg)."""
+    B, S, D = x.shape
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    z = jnp.tanh(xxx @ p["tm_w1"].astype(x.dtype))
+    z = z.reshape(B, S, 5, TM_LORA)
+    m = jnp.einsum("bsla,lad->bsld", z, p["tm_w2"].astype(x.dtype))
+    mus = jnp.stack([p[k].astype(x.dtype)
+                     for k in ("mu_w", "mu_k", "mu_v", "mu_r", "mu_g")])
+    mixed = x[:, :, None] + xx[:, :, None] * (mus[None, None] + m)
+    return tuple(mixed[:, :, i] for i in range(5))
+
+
+def _decay(p, xw):
+    """Per-channel log-decay lw = -exp(ww), ww clamped for f32 safety."""
+    ww = (p["w0"].astype(jnp.float32)
+          + jnp.tanh(xw.astype(jnp.float32) @ p["wd1"].astype(jnp.float32))
+          @ p["wd2"].astype(jnp.float32))
+    return -jnp.exp(jnp.minimum(ww, WW_CLAMP))            # (B,S,D) <= 0
+
+
+def wkv_chunked(r, k, v, lw, u):
+    """Chunked-parallel WKV.
+
+    r,k,v: (B,S,H,Dh); lw: (B,S,H,Dh) log-decay (<=0); u: (H,Dh).
+    Returns (B,S,H,Dh).  All math f32.
+    """
+    B, S, H, Dh = r.shape
+    L = min(CHUNK, S)
+    while S % L:                   # non-multiple-of-32 prompt lengths
+        L -= 1
+    n = S // L
+    f32 = jnp.float32
+    rc, kc, vc, wc = (a.astype(f32).reshape(B, n, L, H, Dh)
+                      .transpose(1, 0, 3, 2, 4)            # (n,B,H,L,Dh)
+                      for a in (r, k, v, lw))
+
+    def chunk(carry, inp):
+        S_state = carry                                    # (B,H,Dk,Dv)
+        rc_, kc_, vc_, wc_ = inp                           # (B,H,L,Dh)
+        cum = jnp.cumsum(wc_, axis=2) - wc_                # exclusive
+        total = cum[:, :, -1:] + wc_[:, :, -1:]            # (B,H,1,Dh)
+        # safe exponents: <=0 for q_adj / inter; <= L*e for k_adj
+        q_adj = rc_ * jnp.exp(cum - total)
+        k_adj = kc_ * jnp.exp(total - (cum + wc_))
+        A = jnp.einsum("bhid,bhjd->bhij", q_adj, k_adj)
+        mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        diag = jnp.einsum("bhid,bhid->bhi", rc_, kc_ * u[None, :, None])
+        o = (jnp.einsum("bhij,bhjd->bhid", A, vc_)
+             + diag[..., None] * vc_)
+        o = o + jnp.einsum("bhid,bhde->bhie", rc_ * jnp.exp(cum), S_state)
+        S_new = (S_state * jnp.exp(total).transpose(0, 1, 3, 2)
+                 + jnp.einsum("bhjd,bhje->bhde", k_adj, vc_))
+        return S_new, o
+
+    S0 = jnp.zeros((B, H, Dh, Dh), f32)
+    S_final, o = lax.scan(chunk, S0, (rc, kc, vc, wc))
+    return o.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dh), S_final
+
+
+def wkv_step(r, k, v, lw, u, S_state):
+    """One decode step.  r,k,v,lw: (B,1,H,Dh); S_state: (B,H,Dk,Dv)."""
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (a.astype(f32)[:, 0] for a in (r, k, v, lw))
+    kv = jnp.einsum("bhd,bhe->bhde", k_, v_)
+    o = jnp.einsum("bhd,bhde->bhe",
+                   r_, S_state + u[None, :, :, None] * kv)
+    S_new = S_state * jnp.exp(w_)[..., None] + kv
+    return o[:, None], S_new
+
+
+def rwkv_time_block(p, x, cfg, *, state=None):
+    """Time-mixing block.  state (decode): {"shift": (B,D), "wkv": (B,H,Dh,Dh)}."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    prev = _shift(x, None if state is None else state["shift"])
+    xx = prev - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
+    lw = _decay(p, xw).reshape(B, S, H, Dh)
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, Dh)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, Dh)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    r = constrain(r, ("batch", None, "act_heads", None))
+    k = constrain(k, ("batch", None, "act_heads", None))
+    v = constrain(v, ("batch", None, "act_heads", None))
+    u = p["u"].astype(jnp.float32)
+    if state is None:
+        o, s_final = wkv_chunked(r, k, v, lw, u)
+        new_state = {"shift": x[:, -1], "wkv": s_final}    # prefill carry-out
+    else:
+        o, wkv_new = wkv_step(r, k, v, lw, u, state["wkv"])
+        new_state = {"shift": x[:, -1], "wkv": wkv_new}
+    # per-head group norm, gate, out-proj
+    o = o.reshape(B, S, H, Dh)
+    from .components import group_norm_heads
+    o = group_norm_heads(o.astype(jnp.float32), p["ln_x_scale"],
+                         p["ln_x_bias"], 64e-5).astype(x.dtype)
+    o = (o.reshape(B, S, H * Dh) * g) @ p["wo"].astype(x.dtype)
+    return constrain(o, ("batch", "seq", "act_embed")), new_state
+
+
+def rwkv_channel_block(p, x, cfg, *, state=None):
+    """Channel-mixing FFN with token shift and squared-ReLU."""
+    prev = _shift(x, None if state is None else state["shift"])
+    xx = prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kk = constrain(kk, ("batch", None, "act_ff"))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) \
+        * (kk @ p["wv"].astype(x.dtype))
+    new_state = {"shift": x[:, -1]}
+    return constrain(out, ("batch", "seq", "act_embed")), new_state
+
+
+def rwkv_state_specs(cfg, batch: int) -> dict:
+    h, dh, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "att_shift": ParamSpec((batch, d), ("batch", None),
+                               dtype=jnp.bfloat16),
+        "ffn_shift": ParamSpec((batch, d), ("batch", None),
+                               dtype=jnp.bfloat16),
+        "wkv": ParamSpec((batch, h, dh, dh), ("batch", "act_heads", None, None),
+                         dtype=jnp.float32),
+    }

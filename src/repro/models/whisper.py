@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the brief, the conv/mel frontend is a **stub**: ``input_specs``
+supplies precomputed frame embeddings (B, n_frames, d_model).  The
+backbone is faithful otherwise: sinusoidal positions on the encoder,
+bidirectional encoder self-attention, causal decoder self-attention +
+cross-attention, pre-LayerNorm, GELU MLPs, tied unembedding.
+
+Deviation (documented in DESIGN.md): decoder positions are sinusoidal
+rather than a 448-entry learned table so the assigned 4k/32k decoder
+lengths are well-defined.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constrain
+from .base import ParamSpec, init_params, abstract_params
+from . import components as C
+
+__all__ = ["WhisperModel"]
+
+
+class WhisperModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- specs ----------------------------------------------------------
+    def _enc_layer(self) -> dict:
+        cfg = self.cfg
+        return {
+            "ln1": C.norm_specs(cfg.d_model, cfg.norm_kind),
+            "attn": C.attn_specs(cfg),
+            "ln2": C.norm_specs(cfg.d_model, cfg.norm_kind),
+            "mlp": C.mlp_specs(cfg),
+        }
+
+    def _dec_layer(self) -> dict:
+        cfg = self.cfg
+        return {
+            "ln1": C.norm_specs(cfg.d_model, cfg.norm_kind),
+            "self_attn": C.attn_specs(cfg),
+            "ln_x": C.norm_specs(cfg.d_model, cfg.norm_kind),
+            "cross_attn": C.attn_specs(cfg),
+            "ln2": C.norm_specs(cfg.d_model, cfg.norm_kind),
+            "mlp": C.mlp_specs(cfg),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": C.embed_specs(cfg),
+            "enc_final_norm": C.norm_specs(cfg.d_model, cfg.norm_kind),
+            "final_norm": C.norm_specs(cfg.d_model, cfg.norm_kind),
+        }
+        for i in range(cfg.n_encoder_layers):
+            specs[f"enc_{i:02d}"] = self._enc_layer()
+        for i in range(cfg.n_layers):
+            specs[f"dec_{i:02d}"] = self._dec_layer()
+        from .base import with_param_dtype
+        return with_param_dtype(specs, cfg.param_dtype)
+
+    def init(self, rng):
+        return init_params(self.param_specs(), rng)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    # -- encoder ----------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: (B, F, D) stub embeddings -> encoder states (B, F, D)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        B, F, D = frames.shape
+        x = frames.astype(dtype) + C.sinusoid_pos(F, D).astype(dtype)[None]
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+        for i in range(cfg.n_encoder_layers):
+            p = params[f"enc_{i:02d}"]
+            h = C.apply_norm(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+            a, _ = C.attention_block(p["attn"], h, cfg, positions=pos,
+                                     causal=False)
+            x = x + a
+            h = C.apply_norm(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+            x = x + C.mlp_block(p["mlp"], h, cfg)
+        return C.apply_norm(params["enc_final_norm"], x, cfg.norm_kind,
+                            cfg.norm_eps)
+
+    def cross_kv(self, params, enc_out):
+        return {f"dec_{i:02d}": C.encode_cross_kv(
+                    params[f"dec_{i:02d}"]["cross_attn"], enc_out, self.cfg)
+                for i in range(self.cfg.n_layers)}
+
+    # -- decoder ----------------------------------------------------------
+    def _decoder(self, params, x, positions, cross, *, caches=None,
+                 cache_pos=None, train=True):
+        cfg = self.cfg
+        new_caches: Dict[str, Any] = {}
+        for i in range(cfg.n_layers):
+            name = f"dec_{i:02d}"
+            p = params[name]
+
+            def blk(p, x, cache):
+                h = C.apply_norm(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+                a, kv = C.attention_block(
+                    p["self_attn"], h, cfg, positions=positions,
+                    cache=cache, cache_pos=cache_pos)
+                x = x + a
+                h = C.apply_norm(p["ln_x"], x, cfg.norm_kind, cfg.norm_eps)
+                x = x + C.cross_attention_block(p["cross_attn"], h,
+                                                cross[name], cfg)
+                h = C.apply_norm(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+                return x + C.mlp_block(p["mlp"], h, cfg), kv
+
+            f = jax.checkpoint(blk) if (train and cfg.remat == "full") \
+                else blk
+            x, kv = f(p, x, None if caches is None else caches[name])
+            new_caches[name] = kv
+        return x, new_caches
+
+    def apply(self, params, batch, *, train: bool = True):
+        """Training forward: batch = {frames, tokens}.  Returns
+        (decoder logits, aux)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        enc_out = self.encode(params, batch["frames"])
+        cross = self.cross_kv(params, enc_out)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = C.embed_tokens(params["embed"], tokens, cfg, dtype)
+        x = x + C.sinusoid_pos(S, cfg.d_model).astype(dtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _ = self._decoder(params, x, pos, cross, train=train)
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        return C.unembed(params["embed"], x, cfg), {"moe_aux": 0.0}
+
+    # -- serving ----------------------------------------------------------
+    def cache_specs(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        kv = lambda s: {  # noqa: E731
+            "k": ParamSpec((batch, s, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_seq", "act_heads", None),
+                           jnp.bfloat16),
+            "v": ParamSpec((batch, s, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_seq", "act_heads", None),
+                           jnp.bfloat16)}
+        specs: Dict[str, Any] = {
+            "self": {f"dec_{i:02d}": kv(seq_len)
+                     for i in range(cfg.n_layers)},
+            "cross": {f"dec_{i:02d}": (kv(cfg.n_frames)["k"],
+                                       kv(cfg.n_frames)["v"])
+                      for i in range(cfg.n_layers)},
+            "pos": ParamSpec((), (), jnp.int32),
+        }
+        return specs
+
+    def init_cache(self, batch: int, seq_len: int):
+        return jax.tree.map(
+            lambda ps: jnp.zeros(ps.shape, ps.dtype),
+            self.cache_specs(batch, seq_len),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def prefill(self, params, batch, *, max_len=None):
+        """Encode + decoder prefill.  batch = {frames, tokens}."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        enc_out = self.encode(params, batch["frames"])
+        cross = self.cross_kv(params, enc_out)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = C.embed_tokens(params["embed"], tokens, cfg, dtype)
+        x = x + C.sinusoid_pos(S, cfg.d_model).astype(dtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, kvs = self._decoder(params, x, pos, cross, train=False)
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        logits = C.unembed(params["embed"], x, cfg)
+        if max_len is not None and max_len > S:
+            extra = max_len - S
+            kvs = {name: {n: jnp.pad(kv[n], ((0, 0), (0, extra),
+                                             (0, 0), (0, 0)))
+                          for n in ("k", "v")}
+                   for name, kv in kvs.items()}
+        cache = {"self": kvs, "cross": cross,
+                 "pos": jnp.asarray(S, jnp.int32)}
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, tokens):
+        """One decoder token against self- and cross-attention caches."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        pos = cache["pos"]                                  # scalar
+        B = tokens.shape[0]
+        x = C.embed_tokens(params["embed"], tokens, cfg, dtype)
+        pe = C.sinusoid_pos_at(pos[None].astype(jnp.int32), cfg.d_model)
+        x = x + pe.astype(dtype)[:, None]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x, new_kvs = self._decoder(params, x, positions, cache["cross"],
+                                   caches=cache["self"], cache_pos=pos,
+                                   train=False)
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        logits = C.unembed(params["embed"], x, cfg)
+        new_cache = {"self": new_kvs, "cross": cache["cross"],
+                     "pos": pos + 1}
+        return logits[:, 0], new_cache

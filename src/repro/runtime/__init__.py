@@ -1,0 +1,3 @@
+from .driver import TrainDriver, DriverConfig, StepEvent  # noqa: F401
+from .straggler import StragglerMonitor  # noqa: F401
+from .elastic import plan_elastic_mesh  # noqa: F401

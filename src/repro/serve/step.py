@@ -1,0 +1,43 @@
+"""Serving steps: prefill (full-sequence -> cache) and decode (one token
+against the cache), plus a simple batched greedy loop for the examples.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+
+
+def make_prefill_step(model, max_len=None) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(model, sample: str = "greedy") -> Callable:
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], cache
+    return serve_step
+
+
+def greedy_generate(model, params, prompt_batch, n_steps: int,
+                    cache_len: int):
+    """Batched greedy decoding driver (example path, jit'd per step)."""
+    step = jax.jit(make_decode_step(model))
+    max_len = max(cache_len, prompt_batch["tokens"].shape[1] + n_steps)
+    last, cache = jax.jit(make_prefill_step(model, max_len=max_len))(
+        params, prompt_batch)
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for _ in range(n_steps - 1):
+        tok, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

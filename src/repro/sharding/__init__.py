@@ -1,0 +1,5 @@
+from .rules import (  # noqa: F401
+    ShardingRules, DEFAULT_RULES, SP_RULES, RULE_VARIANTS, logical_spec,
+    named_sharding, tree_shardings, constrain, set_active_rules,
+    active_rules,
+)

@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules -> PartitionSpec / NamedSharding.
+
+Every parameter and activation in the model zoo is annotated with
+*logical* dimension names ("batch", "embed", "q_heads", ...).  A
+:class:`ShardingRules` table maps each logical name to an ordered tuple
+of mesh axes.  :func:`logical_spec` resolves annotations against a
+concrete mesh with two hard safety rules:
+
+* **divisibility** — a mesh axis (or axis product) is used only if it
+  divides the dimension size; otherwise the dim falls back to fewer
+  axes and ultimately to replication.  (pjit rejects non-divisible
+  ``in_shardings``; we never emit them.)
+* **exclusivity** — a mesh axis may appear at most once in one
+  PartitionSpec; first dim that claims it wins (annotation order).
+
+This is the mesh-level analogue of the paper's translator (§3.12):
+logical ExeBlock addresses -> physical PE/bank assignment happens in
+``core/translator.py``; logical tensor dims -> physical mesh axes
+happens here.  Both balance the physical resource and both refuse
+illegal placements instead of silently emitting them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "ShardingRules", "DEFAULT_RULES", "logical_spec", "named_sharding",
+    "tree_shardings", "constrain",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical dim name -> ordered mesh-axis candidates.
+
+    A value of ``()`` means "never shard this dim".  A tuple like
+    ``("pod", "data")`` means "shard over the product of both if
+    divisible, else over a prefix, else replicate".
+    """
+    # -- activations ------------------------------------------------------
+    batch: tuple = ("pod", "data")       # DP over pods x data
+    seq: tuple = ()                      # set to ("model",) for SP
+    act_embed: tuple = ()                # residual-stream feature dim
+    act_heads: tuple = ("model",)        # attention-internal head dim
+    act_ff: tuple = ("model",)           # MLP-internal hidden dim
+    act_vocab: tuple = ("model",)        # logits vocab dim
+    act_expert: tuple = ("model",)       # MoE expert-parallel dim
+    kv_seq: tuple = ("model",)           # decode KV-cache sequence dim
+    #                                      (flash-decoding: partial softmax
+    #                                       per shard + tiny all-reduces)
+    # -- parameters -------------------------------------------------------
+    embed: tuple = ("data",)             # FSDP: shard feature dim over data
+    vocab: tuple = ("model",)
+    q_heads: tuple = ("model",)
+    kv_heads: tuple = ("model",)
+    head_dim: tuple = ()
+    ff: tuple = ("model",)
+    expert: tuple = ("model",)           # expert-parallelism
+    expert_ff: tuple = ()
+    layers: tuple = ()                   # stacked scan dim: never sharded
+    conv: tuple = ()
+    stats: tuple = ()                    # norms / small vectors
+
+    def get(self, name: Optional[str]) -> tuple:
+        if name is None:
+            return ()
+        try:
+            return getattr(self, name)
+        except AttributeError:
+            raise KeyError(f"unknown logical dim {name!r}") from None
+
+
+DEFAULT_RULES = ShardingRules()
+
+#: Megatron-style sequence parallelism: the residual stream (and the
+#: saved scan carries remat keeps for the backward pass) are sharded
+#: over `model` along seq; attention/MLP internals re-gather.  This is
+#: a *rules* variant, not a model change — select with
+#: ``dryrun --rules sp`` or :func:`set_active_rules`.
+SP_RULES = dataclasses.replace(DEFAULT_RULES, seq=("model",))
+
+RULE_VARIANTS = {"default": DEFAULT_RULES, "sp": SP_RULES}
+
+_ACTIVE_RULES = DEFAULT_RULES
+
+
+def set_active_rules(rules: "ShardingRules") -> None:
+    global _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+
+
+def active_rules() -> "ShardingRules":
+    return _ACTIVE_RULES
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
+                 soft: bool = False) -> PartitionSpec:
+    """Resolve logical dim names to a legal PartitionSpec for ``mesh``.
+
+    ``soft=True`` (activation constraints only): dims whose candidates do
+    not divide become ``UNCONSTRAINED`` instead of replicated, leaving
+    GSPMD propagation free to pick a layout.  Hard mode (params / jit IO,
+    which must be concrete) falls back to replication.
+    """
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} rank != shape {shape} rank")
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    entries: list = []
+    for name, dim in zip(axes, shape):
+        cands = [a for a in rules.get(name) if a in sizes and a not in used]
+        # longest prefix whose size-product divides the dim
+        picked: tuple = ()
+        for k in range(len(cands), 0, -1):
+            prod = math.prod(sizes[a] for a in cands[:k])
+            if prod > 1 and dim % prod == 0:
+                picked = tuple(cands[:k])
+                break
+        used.update(picked)
+        if not picked:
+            fell_back = any(sizes[a] > 1 for a in rules.get(name)
+                            if a in sizes)
+            entries.append(PartitionSpec.UNCONSTRAINED
+                           if (soft and fell_back) else None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(picked)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def named_sharding(axes: Sequence[Optional[str]], shape: Sequence[int],
+                   mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
+                   ) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(axes, shape, mesh, rules))
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh,
+                   rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """Map a pytree of ``ParamSpec``-likes (``.shape`` + ``.axes``) to
+    NamedShardings."""
+    def one(ps):
+        return named_sharding(ps.axes, ps.shape, mesh, rules)
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: hasattr(x, "axes"))
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]],
+              rules: Optional[ShardingRules] = None) -> jax.Array:
+    """`with_sharding_constraint` by logical names; no-op outside a mesh
+    context or under a mesh lacking every candidate axis.  Uses the
+    process-active rules (see :func:`set_active_rules`) by default."""
+    try:
+        mesh = _current_mesh()
+    except RuntimeError:
+        return x
+    if mesh is None or mesh.empty:
+        return x
+    spec = logical_spec(axes, x.shape, mesh, rules or _ACTIVE_RULES,
+                        soft=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    env = jax._src.mesh.thread_resources.env  # physical mesh context
+    return env.physical_mesh

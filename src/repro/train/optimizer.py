@@ -1,0 +1,152 @@
+"""In-house AdamW with global-norm clipping and optional int8
+gradient compression (error feedback) for cross-pod sync.
+
+Optimizer state shardings follow the parameters': each moment inherits
+its parameter's logical axes, so FSDP-sharded params get FSDP-sharded
+moments for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "opt_state_specs", "adamw_update",
+           "clip_by_global_norm", "compress_int8", "decompress_int8"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # int8 stochastic-rounding gradient compression (cross-pod sync);
+    # error-feedback residual is carried in the opt state.
+    compress_grads: bool = False
+    # bf16 param storage: keep the f32 master copy in the opt state so
+    # FSDP gathers and grad reductions move half the bytes.
+    keep_master: bool = False
+
+
+def init_opt_state(params, cfg: OptConfig = OptConfig()):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(zeros, params)
+    if cfg.keep_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def opt_state_specs(param_specs, cfg: OptConfig = OptConfig()):
+    """ParamSpec tree for the optimizer state (moments mirror params)."""
+    from ..models.base import ParamSpec
+
+    def f32(ps):
+        return ParamSpec(ps.shape, ps.axes, jnp.float32)
+    tree = {
+        "mu": jax.tree.map(f32, param_specs,
+                           is_leaf=lambda x: isinstance(x, ParamSpec)),
+        "nu": jax.tree.map(f32, param_specs,
+                           is_leaf=lambda x: isinstance(x, ParamSpec)),
+        "step": ParamSpec((), (), jnp.int32),
+    }
+    if cfg.compress_grads:
+        tree["ef"] = tree["mu"]
+    if cfg.keep_master:
+        tree["master"] = tree["mu"]
+    return tree
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def _lr_at(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def compress_int8(g, key):
+    """Stochastic-rounding int8 quantization; returns (q, scale)."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    noise = jax.random.uniform(key, g.shape) - 0.5
+    q = jnp.clip(jnp.round(g / scale + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def adamw_update(params, grads, state, cfg: OptConfig = OptConfig(),
+                 compress_key: Optional[jax.Array] = None):
+    """One AdamW step.  Returns (params, state, metrics)."""
+    step = state["step"]
+    metrics: dict[str, Any] = {}
+    if cfg.compress_grads:
+        # error-feedback int8: quantize (grad + residual); residual keeps
+        # what quantization lost, preserving convergence (beyond-paper
+        # distributed-optimization trick for cross-pod all-reduce bytes).
+        keys_tree = _key_tree(grads, compress_key)
+        ef = state["ef"]
+        def comp(g, e, k):
+            q, s = compress_int8(g.astype(jnp.float32) + e, k)
+            deq = decompress_int8(q, s)
+            return deq, (g.astype(jnp.float32) + e) - deq
+        pairs = jax.tree.map(comp, grads, ef, keys_tree)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda p: p[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    metrics["grad_norm"] = gnorm
+    lr = _lr_at(cfg, step)
+    metrics["lr"] = lr
+    b1, b2 = cfg.b1, cfg.b2
+    base = state.get("master", params)   # f32 master when params are bf16
+
+    def upd(p, b, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** (step + 1))
+        nu_hat = nu / (1 - b2 ** (step + 1))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:     # no decay on norms/bias
+            delta = delta + cfg.weight_decay * b.astype(jnp.float32)
+        nb = b.astype(jnp.float32) - lr * delta
+        return nb.astype(p.dtype), nb, mu, nu
+
+    quads = jax.tree.map(upd, params, base, grads, state["mu"],
+                         state["nu"])
+    pick = lambda i: jax.tree.map(  # noqa: E731
+        lambda t: t[i], quads, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = pick(0)
+    new_state = {"mu": pick(2), "nu": pick(3), "step": step + 1}
+    if cfg.keep_master:
+        new_state["master"] = pick(1)
+    if cfg.compress_grads:
+        new_state["ef"] = new_ef
+    return new_params, new_state, metrics
+
+
+def _key_tree(tree, key):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))

@@ -1,0 +1,117 @@
+"""Checkpoint/restart, fault-tolerant driver, straggler + elastic policy."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.runtime import DriverConfig, StragglerMonitor, TrainDriver, \
+    plan_elastic_mesh
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"w": jnp.ones((2, 2), jnp.bfloat16),
+                  "s": jnp.asarray(3, jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 7, t)
+    assert latest_step(tmp_path) == 7
+    got, step = restore_checkpoint(tmp_path, t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_marker_and_gc(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, t, keep=2)
+    assert latest_step(tmp_path) == 5
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2      # GC keeps last 2
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(tmp_path, {"a": jnp.zeros(3),
+                                      "b": jnp.zeros(3)})
+
+
+# ---------------------------------------------------------------- driver
+def _toy_step():
+    def step(params, opt, batch):
+        p = jax.tree.map(lambda x: x - 0.1 * batch["g"], params)
+        return p, opt, {"loss": jnp.sum(p["w"] ** 2)}
+    return jax.jit(step)
+
+
+def test_driver_recovers_from_injected_fault(tmp_path):
+    faults = {12}
+
+    def fault_hook(step):
+        if step in faults:
+            faults.discard(step)              # fail once
+            raise RuntimeError("injected device loss")
+
+    drv = TrainDriver(
+        DriverConfig(total_steps=20, ckpt_dir=str(tmp_path), ckpt_every=5,
+                     max_restarts=2),
+        _toy_step(),
+        lambda s: {"g": jnp.asarray(float(s % 3))},
+        fault_hook=fault_hook)
+    params = {"w": jnp.ones((4,))}
+    p, o = drv.run(params, {})
+    kinds = [e.kind for e in drv.events]
+    assert "restart" in kinds
+    assert latest_step(tmp_path) == 20
+    # the restart resumed from step 10's checkpoint, not from scratch
+    restarts = [e for e in drv.events if e.kind == "restart"]
+    assert restarts[0].step == 12
+
+
+def test_driver_gives_up_after_max_restarts(tmp_path):
+    def always_fail(step):
+        raise RuntimeError("permafault")
+    drv = TrainDriver(
+        DriverConfig(total_steps=5, ckpt_dir=str(tmp_path),
+                     max_restarts=2),
+        _toy_step(), lambda s: {"g": jnp.asarray(0.0)},
+        fault_hook=always_fail)
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        drv.run({"w": jnp.ones(2)}, {})
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(threshold=2.0, warmup=3)
+    for i in range(10):
+        ev = m.observe(i, 1.0)
+        assert ev is None
+    ev = m.observe(10, 5.0)
+    assert ev is not None and ev.ratio > 2.0
+    # EMA not poisoned by the outlier
+    assert m.ema == pytest.approx(1.0, rel=0.05)
+
+
+# ---------------------------------------------------------------- elastic
+def test_elastic_mesh_keeps_model_axis():
+    shape, axes = plan_elastic_mesh(480, model_parallel=16, pods=2)
+    assert axes[-1] == "model" and shape[-1] == 16
+    assert shape[0] * shape[1] * shape[2] <= 480
+
+
+def test_elastic_mesh_drops_pod_before_data():
+    shape, axes = plan_elastic_mesh(20, model_parallel=16, pods=2)
+    assert axes == ("data", "model")
+    assert shape == (1, 16)
+
+
+def test_elastic_mesh_none_when_infeasible():
+    assert plan_elastic_mesh(8, model_parallel=16) is None

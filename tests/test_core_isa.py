@@ -1,0 +1,207 @@
+"""ISA + ExeBlock IR + interpreter unit/property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+from repro.core.exeblock import ExeBlock, ExecutionGraph, Task
+from repro.core.interpreter import MachineState, run_graph
+from repro.core.isa import Instr, Op, Stage
+
+
+# ---------------------------------------------------------------- encoding
+@given(
+    op=st.sampled_from(list(Op)),
+    f0=st.integers(0, 0xFFFF), f1=st.integers(0, 0xFFFF),
+    f2=st.integers(0, 0xFFFF),
+    inc=st.integers(0, 0xFF), lut=st.integers(0, 0xF),
+)
+@settings(max_examples=300)
+def test_encode_decode_roundtrip(op, f0, f1, f2, inc, lut):
+    if op is not Op.ST:
+        lut = 0
+    ins = Instr(op, f0=f0, f1=f1, f2=f2, sparse_pc_inc=inc, lookup_type=lut)
+    assert isa.decode(isa.encode(ins)) == ins
+
+
+def test_instruction_count_is_eleven():
+    assert len(Op) == 11  # the Very-RISC ISA has exactly 11 instructions
+
+
+def test_every_op_has_exactly_one_stage():
+    assert set(isa.OP_STAGE) == set(Op)
+
+
+def test_lut_only_on_st():
+    with pytest.raises(ValueError):
+        Instr(Op.ADD, lookup_type=3)
+
+
+def test_field_range_checks():
+    with pytest.raises(ValueError):
+        Instr(Op.ADD, f0=1 << 16)
+    with pytest.raises(ValueError):
+        Instr(Op.ADD, sparse_pc_inc=256)
+
+
+# ---------------------------------------------------------------- exeblock
+def test_stage_order_enforced():
+    with pytest.raises(ValueError):
+        ExeBlock("b", [Instr(Op.ADD), isa.make_ld(0, 0)])
+
+
+def test_stage_pcs():
+    b = ExeBlock("b", [isa.make_ld(0, 0), isa.make_ld(1, 1),
+                       Instr(Op.ADD, f0=0, f1=1, f2=2),
+                       isa.make_st(2, 9)])
+    assert b.stage_pcs.range(Stage.LD) == range(0, 2)
+    assert b.stage_pcs.range(Stage.CAL) == range(2, 3)
+    assert not b.stage_pcs.has(Stage.FLOW)
+    assert b.stage_pcs.range(Stage.ST) == range(3, 4)
+
+
+def test_max_successors():
+    with pytest.raises(ValueError):
+        ExeBlock("b", [], successors=["a", "b", "c", "d"])
+
+
+def test_task_cycle_detection():
+    a = ExeBlock("a", [], successors=["b"])
+    b = ExeBlock("b", [], successors=["a"])
+    t = Task(task_id=0, blocks=[a, b])
+    with pytest.raises(ValueError):
+        t.topo_order()
+
+
+# ------------------------------------------------------------- interpreter
+def _graph_of(instrs, **kw):
+    b = ExeBlock("b", instrs, **kw)
+    return ExecutionGraph("g", [Task(task_id=0, blocks=[b])])
+
+
+def test_ld_cal_st_roundtrip():
+    state = MachineState(n_pes=4)
+    state.dram_write(0, np.full(8, 3.0, np.float32))
+    state.dram_write(1, np.full(8, 4.0, np.float32))
+    g = _graph_of([isa.make_ld(0, 0), isa.make_ld(1, 1),
+                   Instr(Op.MADD, f0=0, f1=1, f2=2),
+                   isa.make_st(2, 100)])
+    run_graph(g, state)
+    np.testing.assert_allclose(state.dram_read(100), 12.0)
+
+
+@given(st.lists(st.sampled_from([Op.ADD, Op.SUB, Op.MUL, Op.MAX, Op.MIN,
+                                 Op.MADD]), min_size=1, max_size=12),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_random_cal_chains_match_numpy(ops, seed):
+    """Random CAL chains over 4 OPM slots == straight numpy evaluation."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=(4, 8)).astype(np.float32)
+    opm = vals.copy()
+    instrs = []
+    addrs = rng.integers(0, 4, size=(len(ops), 3))
+    for op, (a, b, c) in zip(ops, addrs):
+        instrs.append(Instr(op, f0=int(a), f1=int(b), f2=int(c)))
+        fa, fb, fc = opm[a].copy(), opm[b].copy(), opm[c].copy()
+        if op is Op.ADD:
+            opm[c] = fa + fb
+        elif op is Op.SUB:
+            opm[c] = fa - fb
+        elif op is Op.MUL:
+            opm[c] = fa * fb
+        elif op is Op.MAX:
+            opm[c] = np.maximum(fa, fb)
+        elif op is Op.MIN:
+            opm[c] = np.minimum(fa, fb)
+        else:
+            opm[c] = fa * fb + fc
+    state = MachineState(n_pes=1)
+    state.pes[0].opm[:4] = vals
+    g = _graph_of(instrs)
+    run_graph(g, state)
+    np.testing.assert_allclose(state.pes[0].opm[:4], opm, rtol=1e-5)
+
+
+def test_preread_semantics_one_time_capture():
+    """PREREAD captures the value at pre-read time; injected right before
+    the consumer it is semantically transparent."""
+    state = MachineState(n_pes=1)
+    state.pes[0].opm[0, :] = 2.0
+    state.pes[0].opm[1, :] = 5.0
+    g = _graph_of([Instr(Op.PREREAD0, f0=0),
+                   Instr(Op.MUL, f0=0, f1=1, f2=2)])
+    run_graph(g, state)
+    np.testing.assert_allclose(state.pes[0].opm[2], 10.0)
+
+
+def test_raw_forwarding_transparent():
+    state = MachineState(n_pes=1)
+    state.pes[0].opm[0, :] = 1.0
+    state.pes[0].opm[1, :] = 2.0
+    g = _graph_of([Instr(Op.ADD, f0=0, f1=1, f2=2),    # 3
+                   Instr(Op.MUL, f0=2, f1=1, f2=3)])   # immediately reuse
+    run_graph(g, state)
+    np.testing.assert_allclose(state.pes[0].opm[3], 6.0)
+
+
+def test_copy_moves_data_between_pes():
+    state = MachineState(n_pes=4)
+    state.pes[0].opm[7, :] = 42.0
+    g = _graph_of([isa.make_copy(7, 9, 3)])
+    run_graph(g, state)
+    np.testing.assert_allclose(state.pes[3].opm[9], 42.0)
+
+
+def test_st_with_lut_applies_table():
+    from repro.core import lut
+    state = MachineState(n_pes=1)
+    state.pes[0].opm[0, :] = 0.5
+    g = _graph_of([isa.make_st(0, 50, lookup_type=2)])  # tanh
+    run_graph(g, state)
+    got = state.dram_read(50)
+    np.testing.assert_allclose(got, np.tanh(0.5), atol=1 / 256)
+    # the table is exact for Q8.8-representable inputs
+    np.testing.assert_allclose(got, lut.apply_lookup(2, np.full(8, 0.5)))
+
+
+def test_sparse_skipping_equals_dense_with_zero_weights():
+    """Sparse-PC-Inc skipping == executing with zeroed (pruned) weights."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(6, 8)).astype(np.float32)
+    x = rng.normal(size=(6, 8)).astype(np.float32)
+    keep = np.array([True, False, True, True, False, True])
+    instrs = ([isa.make_ld(i, i) for i in range(6)]
+              + [isa.make_ld(6 + i, 6 + i) for i in range(6)]
+              + [isa.make_ld(12, 12)]
+              + [Instr(Op.MADD, f0=i, f1=6 + i, f2=12) for i in range(6)]
+              + [isa.make_st(12, 99)])
+
+    # dense run with pruned weights zeroed
+    state_d = MachineState(n_pes=1)
+    wz = np.where(keep[:, None], w, 0.0).astype(np.float32)
+    state_d.dram_write_array(0, wz)
+    state_d.dram_write_array(6, x)
+    run_graph(_graph_of(list(instrs)), state_d)
+
+    # sparse run: skip the pruned MADDs entirely
+    b = ExeBlock("b", list(instrs))
+    valid = [True] * 13 + list(keep) + [True]
+    b.apply_sparse_vector(valid)
+    state_s = MachineState(n_pes=1)
+    state_s.dram_write_array(0, w)  # un-zeroed weights: skipping must prune
+    state_s.dram_write_array(6, x)
+    run_graph(ExecutionGraph("g", [Task(task_id=0, blocks=[b])]), state_s)
+
+    np.testing.assert_allclose(state_s.dram_read(99), state_d.dram_read(99),
+                               rtol=1e-5)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=40))
+@settings(max_examples=100)
+def test_sparse_pc_inc_walk_visits_exactly_valid_pcs(bits):
+    bits[0] = True
+    instrs = [Instr(Op.ADD, f0=0, f1=1, f2=2) for _ in bits]
+    b = ExeBlock("b", instrs)
+    b.apply_sparse_vector(bits)
+    assert b.executed_pcs() == [i for i, v in enumerate(bits) if v]

@@ -1,0 +1,116 @@
+"""CNN reuse-scheme generators vs paper Table 6 + functional correctness."""
+import numpy as np
+import pytest
+
+from repro.core import dataflows as df
+from repro.core.dataflows import (ALEXNET_CONV2, PAPER_TABLE6, ConvSpec,
+                                  Reuse, build_conv_program, conv_reference,
+                                  panel_items, read_psums, seed_dram)
+from repro.core.interpreter import MachineState, run_graph
+
+SCHEMES = list(Reuse)
+
+
+# --------------------------------------------------------- static counts
+@pytest.mark.parametrize("scheme", [Reuse.NO_REUSE, Reuse.FILTER_REUSE,
+                                    Reuse.IFMAP_REUSE])
+def test_table6_exact_counts(scheme):
+    """No/Filter/Ifmap Reuse reproduce Table 6 instruction + OPM counts
+    for AlexNet_CONV2 exactly."""
+    g = build_conv_program(ALEXNET_CONV2, scheme)
+    got = g.totals()
+    want = PAPER_TABLE6[scheme]
+    for key in ("ld", "cal", "copy", "st", "opm_entries"):
+        assert got[key] == want[key], (scheme, key, got[key], want[key])
+
+
+def test_table6_cal_st_equal_across_all_schemes():
+    """All five implementations have identical CAL and ST counts (Table 6)."""
+    for scheme in SCHEMES:
+        got = build_conv_program(ALEXNET_CONV2, scheme).totals()
+        assert got["cal"] == 6400, scheme
+        assert got["st"] == 256, scheme
+
+
+def test_table6_ld_ordering():
+    """LD traffic ordering: All < Conv < Filter = Ifmap < NoReuse."""
+    ld = {s: build_conv_program(ALEXNET_CONV2, s).totals()["ld"]
+          for s in SCHEMES}
+    assert ld[Reuse.ALL_REUSE] < ld[Reuse.CONV_REUSE] \
+        < ld[Reuse.FILTER_REUSE] == ld[Reuse.IFMAP_REUSE] \
+        < ld[Reuse.NO_REUSE]
+
+
+def test_table6_copy_ordering():
+    """COPY: NoReuse has none; Conv-Reuse uses the most (Table 6)."""
+    cp = {s: build_conv_program(ALEXNET_CONV2, s).totals()["copy"]
+          for s in SCHEMES}
+    assert cp[Reuse.NO_REUSE] == 0
+    assert cp[Reuse.CONV_REUSE] == max(cp.values())
+    assert cp[Reuse.ALL_REUSE] > cp[Reuse.FILTER_REUSE]
+
+
+def test_opm_footprint_reduction():
+    """Reuse schemes reduce Operand-RAM pressure (Table 6: 13056 -> 8256)."""
+    t = {s: build_conv_program(ALEXNET_CONV2, s).totals() for s in SCHEMES}
+    assert t[Reuse.FILTER_REUSE]["opm_entries"] == 8256
+    assert t[Reuse.IFMAP_REUSE]["opm_entries"] == 8256
+    assert t[Reuse.ALL_REUSE]["opm_entries"] \
+        < t[Reuse.NO_REUSE]["opm_entries"]
+
+
+def test_successor_fanout_respects_hardware_limit():
+    for scheme in SCHEMES:
+        g = build_conv_program(ALEXNET_CONV2, scheme)
+        for _, b in g.all_blocks():
+            assert len(b.successors) <= 3
+
+
+# ------------------------------------------------------ functional checks
+SMALL = ConvSpec("small", in_ch=2, out_ch=16, kh=3, kw=3, ih=8, iw=8)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_small_conv_matches_numpy(scheme):
+    """Every scheme computes the same partial sums as the numpy oracle."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(SMALL.out_ch, SMALL.in_ch, 3, 3)).astype(np.float32)
+    x = rng.normal(size=(SMALL.in_ch, SMALL.ih, SMALL.iw,
+                         SMALL.batch)).astype(np.float32)
+    p0 = rng.normal(size=(SMALL.out_ch, SMALL.oh * SMALL.ow,
+                          SMALL.batch)).astype(np.float32)
+
+    n_items = 16  # 4x4 grid on 8 PEs
+    g = build_conv_program(SMALL, scheme, n_pes=8, items_per_block=2,
+                           channel=1, n_items=n_items)
+    state = MachineState(n_pes=8, opm_entries=4096)
+    seed_dram(state, SMALL, w, x, p0)
+    run_graph(g, state)
+
+    items = panel_items(SMALL, scheme, n_items=n_items)
+    want = conv_reference(SMALL, w, x, channel=1, items=items, psums0=p0)
+    got = read_psums(state, SMALL, items)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_translated_program_equivalent(scheme):
+    """translate() preserves semantics: physical program == logical program."""
+    from repro.core.translator import TranslatorConfig, translate
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(SMALL.out_ch, SMALL.in_ch, 3, 3)).astype(np.float32)
+    x = rng.normal(size=(SMALL.in_ch, SMALL.ih, SMALL.iw,
+                         SMALL.batch)).astype(np.float32)
+    n_items = 16
+    g = build_conv_program(SMALL, scheme, n_pes=8, items_per_block=2,
+                           channel=0, n_items=n_items)
+    phys, report = translate(g, TranslatorConfig(n_pes=8))
+    state = MachineState(n_pes=8, opm_entries=4096)
+    seed_dram(state, SMALL, w, x)
+    run_graph(phys, state)
+
+    items = panel_items(SMALL, scheme, n_items=n_items)
+    want = conv_reference(SMALL, w, x, channel=0, items=items)
+    got = read_psums(state, SMALL, items)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    assert report.max_opm_entries <= 2048

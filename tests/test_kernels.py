@@ -1,0 +1,133 @@
+"""Per-kernel validation: shape/dtype sweeps in interpret mode against
+the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import gemm_dataflow as gd
+from repro.kernels import block_sparse as bs
+from repro.kernels import lut_activation as lut
+from repro.kernels import flash_attention as fa
+
+
+def rnd(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- gemm
+@pytest.mark.parametrize("dataflow", list(gd.Dataflow))
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 384),
+                                   (200, 130, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_dataflow(dataflow, m, n, k, dtype):
+    a = rnd(0, (m, k), dtype)
+    b = rnd(1, (k, n), dtype)
+    got = gd.matmul(a, b, dataflow, bm=128, bn=128, bk=128, interpret=True)
+    want = gd.matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_gemm_traffic_ordering_matches_paper():
+    """All-Reuse < Ifmap/Filter < No-Reuse (paper Table 6 / Fig 13)."""
+    m = n = k = 2048
+    t = {df: gd.modeled_traffic(m, n, k, df)["total_bytes"]
+         for df in gd.Dataflow}
+    assert t[gd.Dataflow.OUTPUT_STATIONARY] < t[gd.Dataflow.INPUT_STATIONARY]
+    assert t[gd.Dataflow.OUTPUT_STATIONARY] < t[gd.Dataflow.WEIGHT_STATIONARY]
+    assert t[gd.Dataflow.INPUT_STATIONARY] < t[gd.Dataflow.NO_REUSE]
+    assert t[gd.Dataflow.WEIGHT_STATIONARY] < t[gd.Dataflow.NO_REUSE]
+
+
+# ---------------------------------------------------------- block sparse
+@pytest.mark.parametrize("density", [0.0, 0.25, 0.6, 1.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_sparse(density, dtype):
+    m, k, n = 128, 512, 384
+    bm = bk = bn = 128
+    a = rnd(2, (m, k), dtype)
+    b = rnd(3, (k, n), dtype)
+    rng = np.random.default_rng(0)
+    mask = rng.random((k // bk, n // bn)) < density
+    got = bs.matmul(a, b, mask, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = bs.matmul_block_sparse_ref(a, b, jnp.asarray(mask), bk, bn)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_block_sparse_savings():
+    mask = np.array([[1, 0], [0, 0], [1, 1]], bool)
+    s = bs.sparse_savings(mask)
+    assert s["tiles_live"] == 3
+    assert abs(s["flops_saved_frac"] - 0.5) < 1e-9
+
+
+# ------------------------------------------------------------------ lut
+@pytest.mark.parametrize("name", ["sigmoid", "tanh", "gelu", "exp"])
+def test_lut_activation(name):
+    x = jnp.linspace(-7.9, 7.9, 512 * 256).reshape(512, 256)
+    got = lut.apply_lut(x, name, interpret=True)
+    want = lut.lut_ref(x, lut.table_for(name))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)   # bit-exact vs oracle
+    # close to the exact function (16-bit grid accuracy, paper §3.9)
+    exact = lut.TABLES[name](x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                               atol=2e-3, rtol=1e-2)
+
+
+def test_lut_exactness_on_grid():
+    """Exact for 16-bit-quantized inputs — the paper's accuracy claim."""
+    idx = jnp.arange(0, 1 << 16, 257)
+    x = (idx.astype(jnp.float32) * (16.0 / (1 << 16)) - 8.0).reshape(1, -1)
+    x = jnp.pad(x, ((0, 0), (0, 256 - x.shape[1] % 256)))
+    got = lut.apply_lut(x, "tanh", interpret=True)
+    want = jnp.tanh(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+# ------------------------------------------------------------ attention
+@pytest.mark.parametrize("sq,skv,h,kvh,d", [
+    (256, 256, 4, 4, 64),
+    (256, 512, 8, 2, 64),     # GQA + longer kv (prefill-style)
+    (512, 512, 4, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(sq, skv, h, kvh, d, causal, dtype):
+    if causal and sq != skv:
+        pytest.skip("causal offset only defined for sq == skv here")
+    b = 2
+    q = rnd(4, (b, sq, h, d), dtype)
+    k = rnd(5, (b, skv, kvh, d), dtype)
+    v = rnd(6, (b, skv, kvh, d), dtype)
+    got = fa.attention(q, k, v, causal=causal, bq=128, bkv=128,
+                       interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    want = fa.attention_ref(qf, kf, vf, causal=causal)
+    want = want.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model-side chunked-flash jnp path."""
+    from repro.models.components import flash_attention as model_flash
+    b, s, h, kvh, d = 2, 256, 8, 2, 64
+    q = rnd(7, (b, s, h, d), jnp.float32)
+    k = rnd(8, (b, s, kvh, d), jnp.float32)
+    v = rnd(9, (b, s, kvh, d), jnp.float32)
+    got = fa.attention(q, k, v, causal=True, bq=128, bkv=128,
+                       interpret=True)
+    want = model_flash(q, k, v, causal=True, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,78 @@
+"""Sharding-rules engine: divisibility, exclusivity, soft fallback."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import DEFAULT_RULES, logical_spec
+
+pytestmark = pytest.mark.skipif(len(jax.devices()) != 1,
+                                reason="mesh built from 1 cpu device")
+
+
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_single_device_mesh_never_shards():
+    m = mesh11()
+    spec = logical_spec(("batch", "seq", "act_ff"), (32, 128, 256), m)
+    assert spec == P()
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis sizes without real devices."""
+    def __init__(self, sizes):
+        self._sizes = sizes
+        self.axis_names = tuple(sizes)
+
+    @property
+    def devices(self):
+        import numpy as np
+        return np.empty(tuple(self._sizes.values()))
+
+
+def fm(pod=2, data=16, model=16):
+    return FakeMesh({"pod": pod, "data": data, "model": model})
+
+
+def test_divisible_dims_get_all_candidate_axes():
+    spec = logical_spec(("batch", None), (256, 7), fm())
+    assert spec == P(("pod", "data"))
+
+
+def test_non_divisible_falls_back_to_prefix_then_replicated():
+    # 16 % 32 != 0 for (pod,data) product; 16 % 2 == 0 for pod alone
+    spec = logical_spec(("batch",), (16,), fm())
+    assert spec == P("pod")
+    spec = logical_spec(("batch",), (3,), fm())
+    assert spec == P()
+
+
+def test_axis_exclusivity_first_dim_wins():
+    # both dims want "model": only the first gets it
+    spec = logical_spec(("ff", "vocab"), (64, 64), fm())
+    assert spec == P("model")       # second entry dropped->trailing None
+
+
+def test_soft_mode_emits_unconstrained():
+    spec = logical_spec(("act_heads",), (10,), fm(), soft=True)
+    assert spec[0] is P.UNCONSTRAINED
+    spec = logical_spec(("act_heads",), (32,), fm(), soft=True)
+    assert spec == P("model")
+
+
+@given(dim=st.integers(1, 4096))
+@settings(max_examples=60, deadline=None)
+def test_never_emits_non_divisible_sharding(dim):
+    spec = logical_spec(("batch", "ff"), (dim, dim), fm())
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        assert dim % prod == 0

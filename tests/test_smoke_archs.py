@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (brief requirement (f)): a reduced
+config of each family runs forward + one train step on CPU with correct
+shapes and no NaNs; prefill->decode agrees with the full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import build_model
+from repro.train.optimizer import init_opt_state
+from repro.train.step import make_loss_fn, make_train_step
+
+B, S = 4, 32
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = configs.get_smoke(name)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            batch = SyntheticPipeline(cfg, batch=B, seq=S).device_batch(0)
+            cache[name] = (cfg, model, params, batch)
+        return cache[name]
+    return get
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_forward_shapes_and_finite(built, name):
+    cfg, model, params, batch = built(name)
+    logits, aux = model.apply(params, batch, train=False)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_train_step_decreases_loss(built, name):
+    cfg, model, params, batch = built(name)
+    step = jax.jit(make_train_step(model, cfg, n_micro=2))
+    opt = init_opt_state(params)
+    p, o, m0 = step(params, opt, batch)
+    losses = [float(m0["loss"])]
+    for _ in range(3):
+        p, o, m = step(p, o, batch)   # same batch: loss must drop
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_prefill_matches_forward(built, name):
+    cfg, model, params, batch = built(name)
+    logits, _ = model.apply(params, batch, train=False)
+    last, cache = model.prefill(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(last, np.float32),
+        np.asarray(logits[:, -1], np.float32), rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_decode_step_extends_consistently(built, name):
+    """decode(prefill(x), t) == forward(x + t)[-1] — the cache carries
+    exactly the state the full forward would rebuild.
+
+    MoE archs: capacity drops depend on how many tokens compete, which
+    legitimately differs between a 1-token decode and a full forward —
+    so the check runs with capacity_factor large enough that nothing is
+    dropped in either mode (isolates cache correctness)."""
+    cfg, model, params, batch = built(name)
+    if cfg.moe is not None:
+        # capacity drops legitimately differ between 1-token decode and
+        # a full forward; disable them to isolate cache correctness
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+        from repro.models import build_model as _bm
+        model = _bm(cfg)
+    nxt = batch["tokens"][:, -1:]
+    # reference forward padded to a chunk/window multiple; causality
+    # makes positions > S irrelevant to the compared logits at S
+    pad = 32
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate(
+        [batch["tokens"], jnp.tile(nxt, (1, pad))], axis=1)
+    if "mrope_positions" in batch:
+        mp = batch["mrope_positions"]
+        extra = mp[:, :, -1:] + 1 + jnp.arange(pad)[None, None]
+        ext["mrope_positions"] = jnp.concatenate([mp, extra], axis=2)
+    ext["labels"] = jnp.pad(batch["labels"], ((0, 0), (0, pad)))
+    _, cache = model.prefill(params, batch, max_len=S + 8)
+    got, _ = model.decode_step(params, cache, nxt)
+    want, _ = model.apply(params, ext, train=False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want[:, S], np.float32),
+                               rtol=4e-2, atol=4e-2)
+
+
+@pytest.mark.parametrize("name", ["recurrentgemma-2b", "rwkv6-3b"])
+def test_sub_quadratic_state_is_constant_size(built, name):
+    """long_500k eligibility: decode state must not grow with history."""
+    cfg, model, params, batch = built(name)
+    specs_a = model.cache_specs(B, 64)
+    specs_b = model.cache_specs(B, 65536)
+    import math
+    size = lambda t: sum(  # noqa: E731
+        math.prod(ps.shape) for ps in jax.tree.leaves(
+            t, is_leaf=lambda x: hasattr(x, "axes")))
+    sa, sb = size(specs_a), size(specs_b)
+    # hybrid: local-attn ring may grow up to `window` then stop
+    assert sb <= sa * (cfg.local_window // 16 if cfg.family == "hybrid"
+                       else 1.01)
+
+
+def test_moe_param_accounting():
+    cfg = configs.get("llama4-scout-17b-a16e")
+    total, active = cfg.n_params(), cfg.n_active_params()
+    assert 1.0e11 < total < 1.2e11          # ~109B total
+    assert 1.5e10 < active < 2.0e10         # ~17B active
+    dense = configs.get("qwen1.5-110b")
+    assert 1.0e11 < dense.n_params() < 1.25e11
+    assert dense.n_params() == dense.n_active_params()
