@@ -19,6 +19,8 @@ def save(name: str, payload) -> None:
 
 
 def fmt_table(rows: List[Dict], cols: List[str]) -> str:
+    if not rows:
+        return "  ".join(cols) + "\n(no rows)"
     widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
               for c in cols}
     line = "  ".join(c.ljust(widths[c]) for c in cols)

@@ -21,15 +21,18 @@ from .common import conv_instances, fmt_table, save
 SWEEP = (1, 2, 4, 8)
 
 
-def run(sweep=SWEEP, spec=ALEXNET_CONV2) -> dict:
+def run(sweep=SWEEP, spec=ALEXNET_CONV2, smoke: bool = False) -> dict:
     cfg = MachineConfig()
+    if smoke:
+        sweep = sweep[:2]
+    repeats = 4 if smoke else 32
     rows = []
     best = {}
     for scheme in Reuse:
         utils = {}
         for n in sweep:
             # steady state: the task loops itself (paper §5.2)
-            g = conv_instances(spec, scheme, n, repeats=32)
+            g = conv_instances(spec, scheme, n, repeats=repeats)
             r = simulate(g, cfg)
             utils[n] = r.mac_utilization
         rows.append({"scheme": scheme.value,

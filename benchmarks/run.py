@@ -1,16 +1,23 @@
-"""Benchmark harness entry point: one module per paper table/figure.
+"""Benchmark harness entry point: one module per paper table/figure,
+plus the serving-throughput benchmark.
 
     PYTHONPATH=src python -m benchmarks.run           # everything
     PYTHONPATH=src python -m benchmarks.run table6    # one benchmark
+    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: reduced sizes
+
+``--smoke`` runs every benchmark at reduced problem size (benches whose
+``run`` accepts a ``smoke`` kwarg) and fails loudly if any entry point
+errors — the CI guard against perf entry points silently rotting.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
 from . import (fig11_util, fig13_traffic, fig15_energy, fig19_sparse,
                fig22_simd, fig23_scaling, kernel_dataflow, roofline,
-               table5_cisc, table6_static)
+               serve_throughput, table5_cisc, table6_static)
 
 BENCHES = {
     "table5": table5_cisc.run,
@@ -23,16 +30,26 @@ BENCHES = {
     "fig23": fig23_scaling.run,
     "kernel": kernel_dataflow.run,
     "roofline": roofline.run,
+    "serve": serve_throughput.run,
 }
 
 
 def main(argv):
-    names = argv or list(BENCHES)
+    smoke = "--smoke" in argv
+    unknown = [a for a in argv if a.startswith("--") and a != "--smoke"]
+    if unknown:
+        print(f"unknown flags: {unknown}; known: --smoke", file=sys.stderr)
+        return 2
+    names = [a for a in argv if not a.startswith("--")] or list(BENCHES)
     summary = []
     for name in names:
         t0 = time.time()
         try:
-            out = BENCHES[name]()
+            kw = {}
+            if smoke and "smoke" in inspect.signature(
+                    BENCHES[name]).parameters:
+                kw["smoke"] = True
+            out = BENCHES[name](**kw)
             checks = {k: v for k, v in (out or {}).items()
                       if isinstance(v, bool)}
             ok = all(checks.values()) if checks else True

@@ -1,6 +1,9 @@
-"""Batched serving example: prefill a batch of prompts across all cache
-families (full KV, ring-buffer local attention, recurrent state), then
-decode — mirrors the decode_32k / long_500k dry-run shapes at CPU size.
+"""Serving example, two tiers:
+
+1. Continuous-batching engine (paged KV cache) on the dense-GQA arch:
+   staggered request lengths, mid-flight admission, per-request TTFT.
+2. Lockstep greedy loop across the other cache families (ring-buffer
+   local attention, recurrent state) — fixed-size states don't page.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -12,15 +15,42 @@ import numpy as np
 from repro import configs
 from repro.data.pipeline import SyntheticPipeline
 from repro.models import build_model
+from repro.serve import Request, ServeEngine
 from repro.serve.step import make_decode_step, make_prefill_step
 
-ARCHS = ["qwen3-0.6b",            # dense GQA: full KV cache
-         "recurrentgemma-2b",     # hybrid: ring buffer + RG-LRU state
-         "rwkv6-3b"]              # attention-free: O(1) state
+LOCKSTEP_ARCHS = [
+    "recurrentgemma-2b",     # hybrid: ring buffer + RG-LRU state
+    "rwkv6-3b",              # attention-free: O(1) state
+]
 
 
-def main():
-    for name in ARCHS:
+def engine_demo():
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(sl,)).astype(np.int32),
+                    max_new_tokens=12)
+            for i, sl in enumerate([24, 48, 16, 40, 32, 20])]
+    eng = ServeEngine(model, params, max_batch=4, n_pages=64,
+                      page_size=8)
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"qwen3-0.6b[engine]     {len(done)} reqs "
+          f"(prompts 16..48) -> {toks} tok in {dt * 1e3:6.0f} ms; "
+          f"{eng.n_decode_steps} batched decode steps, "
+          f"{eng.n_prefills} prefills")
+    for r in sorted(done, key=lambda r: r.rid)[:3]:
+        print(f"  req{r.rid}: prompt {len(r.prompt):2d} tok, "
+              f"ids={r.generated[:6]}")
+
+
+def lockstep_demo():
+    for name in LOCKSTEP_ARCHS:
         cfg = configs.get_smoke(name)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -37,9 +67,15 @@ def main():
         dt = time.time() - t0
         state_bytes = sum(
             v.size * v.dtype.itemsize for v in jax.tree.leaves(cache))
-        print(f"{name:20s} decoded 16 tok x 4 seqs in {dt * 1e3:6.0f} ms; "
-              f"cache/state = {state_bytes / 1e3:8.1f} kB; "
+        print(f"{name}[lockstep] decoded 16 tok x 4 seqs in "
+              f"{dt * 1e3:6.0f} ms; cache/state = "
+              f"{state_bytes / 1e3:8.1f} kB; "
               f"ids[0]={np.concatenate(toks, 1)[0][:6]}")
+
+
+def main():
+    engine_demo()
+    lockstep_demo()
 
 
 if __name__ == "__main__":

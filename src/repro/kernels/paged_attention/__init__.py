@@ -1,0 +1,3 @@
+from .kernel import paged_attention_kernel  # noqa: F401
+from .ops import paged_attention  # noqa: F401
+from .ref import gather_pages, paged_attention_ref  # noqa: F401

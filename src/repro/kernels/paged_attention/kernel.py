@@ -1,0 +1,105 @@
+"""Paged decode attention: gather non-contiguous KV pages via
+scalar-prefetched page tables.
+
+The page table IS the paper's programmable LD stage: instead of a
+fixed-function contiguous DMA, each (batch, kv-head, page-slot) grid
+step computes its own source address from the prefetched table
+(``tbl[b, i]``) and stages exactly one resident page into VMEM.  CAL is
+the usual online-softmax pair of MACs; FLOW carries (m, l, acc) across
+the page sweep in VMEM scratch; ST writes the normalized output once —
+output-stationary, like All-Reuse.
+
+Pages beyond a sequence's length are skipped entirely (``pl.when``),
+the paged analogue of Sparse PC Inc: work that is not addressed is
+never issued.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, ps: int, n_slots: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(i * ps < length)
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (ps, Dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        k_pos = i * ps + jax.lax.broadcasted_iota(
+            jnp.int32, (1, ps), 1)[0]
+        s = jnp.where((k_pos < length)[None, :], s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == n_slots - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, KVH, G, Dh); k/v_pages: (P, ps, KVH, Dh);
+    page_tables: (B, n_slots) int32; lengths: (B,) int32.
+    Returns (B, KVH, G, Dh)."""
+    B, KVH, G, Dh = q.shape
+    _, ps, _, _ = k_pages.shape
+    n_slots = page_tables.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh),
+                         lambda b, h, i, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, Dh),
+                         lambda b, h, i, tbl, ln: (tbl[b, i], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, Dh),
+                         lambda b, h, i, tbl, ln: (tbl[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, i, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),        # running max
+            pltpu.VMEM((G,), jnp.float32),        # running denom
+            pltpu.VMEM((G, Dh), jnp.float32),     # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, ps=ps, n_slots=n_slots, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Dh), q.dtype),
+        interpret=interpret,
+        name="paged_attention",
+    )(page_tables, lengths, q, k_pages, v_pages)

@@ -1,0 +1,30 @@
+"""jit'd wrapper: (B, H, Dh) decode layout -> kernel layout and back."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import paged_attention_kernel
+from .ref import paged_attention_ref  # noqa: F401
+
+__all__ = ["paged_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_tables, lengths, *,
+                    interpret: bool = False):
+    """Single-token decode attention over paged KV.
+
+    q: (B, H, Dh); k/v_pages: (P, ps, KVH, Dh); page_tables: (B, n)
+    int32 page ids; lengths: (B,) attendable tokens.  Returns
+    (B, H, Dh).  GQA kept factored: q heads are grouped by kv head so
+    each page is staged once per kv head and reused across the group.
+    """
+    B, H, Dh = q.shape
+    KVH = k_pages.shape[2]
+    G = H // KVH
+    qf = q.reshape(B, KVH, G, Dh)
+    out = paged_attention_kernel(qf, k_pages, v_pages, page_tables,
+                                 lengths, interpret=interpret)
+    return out.reshape(B, H, Dh)

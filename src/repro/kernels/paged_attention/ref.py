@@ -1,0 +1,40 @@
+"""Oracle: decode attention over paged KV via explicit gather.
+
+Op-for-op the same math as ``components.decode_attention`` (bf16
+operands, f32 MXU accumulation, -1e30 masking) so the continuous-
+batching decode path stays token-exact against the contiguous-cache
+greedy oracle: gathered padding positions contribute exact zeros.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(pages, page_tables):
+    """(P, ps, KVH, Dh) + (B, n) -> (B, n * ps, KVH, Dh)."""
+    B, n = page_tables.shape
+    g = pages[page_tables]                       # (B, n, ps, KVH, Dh)
+    return g.reshape(B, n * pages.shape[1], *pages.shape[2:])
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths):
+    """q: (B, H, Dh); k/v_pages: (P, ps, KVH, Dh); page_tables:
+    (B, n) int32; lengths: (B,) attendable tokens per sequence
+    (including the one just written).  Returns (B, H, Dh)."""
+    B, H, Dh = q.shape
+    KVH = k_pages.shape[2]
+    G = H // KVH
+    k = gather_pages(k_pages, page_tables)       # (B, S, KVH, Dh)
+    v = gather_pages(v_pages, page_tables)
+    qh = q.reshape(B, KVH, G, Dh)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qh, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / math.sqrt(Dh))
+    idx = jnp.arange(k.shape[1])
+    valid = idx[None, :] < lengths[:, None]      # (B, S)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, Dh).astype(q.dtype)

@@ -11,23 +11,31 @@ import dataclasses
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "HW", "Hardware"]
+__all__ = ["make_mesh", "make_production_mesh", "make_local_mesh", "HW",
+           "Hardware"]
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` was added after
+    0.4.37 (where all axes are Auto by default)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1):
     """Tiny mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,7 +1,8 @@
-"""Batched-serving launcher: prefill a batch of prompts, decode greedily.
+"""Serving launcher: continuous-batching engine over the paged KV
+cache (default), or the naive lockstep loop (--naive) for comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+        --requests 16 --batch 8 --prompt-len 64 --gen 32 --rate 50
 """
 from __future__ import annotations
 
@@ -13,27 +14,55 @@ import numpy as np
 
 from repro import configs
 from repro.data.pipeline import SyntheticPipeline
-from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
+from repro.serve import Request, ServeEngine
+from repro.serve.kv_cache import pages_needed
 from repro.serve.step import make_decode_step, make_prefill_step
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
+def synth_requests(cfg, n: int, prompt_len: int, gen: int,
+                   rate: float, seed: int = 0):
+    """Poisson arrival trace with markov-ish prompts (same generator
+    family as the training pipeline)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    reqs = []
+    for i in range(n):
+        base = rng.integers(0, cfg.vocab_size)
+        drift = rng.integers(0, 17, size=prompt_len)
+        prompt = ((base + np.cumsum(drift)) % cfg.vocab_size).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gen,
+                            arrival=float(arrivals[i])))
+    return reqs
 
-    cfg = (configs.get_smoke if args.smoke else configs.get)(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+
+def run_engine(model, params, reqs, *, batch, page_size, n_pages,
+               realtime):
+    eng = ServeEngine(model, params, max_batch=batch, n_pages=n_pages,
+                      page_size=page_size,
+                      max_pages_per_seq=max(
+                          pages_needed(len(r.prompt) + r.max_new_tokens,
+                                       page_size) for r in reqs))
+    t0 = time.perf_counter()
+    done = eng.run(reqs, realtime=realtime)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    ttfts = [r.ttft for r in done if r.ttft is not None
+             and r.ttft != float("inf")]
+    return {"tokens": toks, "wall_s": dt,
+            "tok_per_s": toks / max(dt, 1e-9),
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "decode_steps": eng.n_decode_steps,
+            "prefills": eng.n_prefills}
+
+
+def run_naive(model, params, cfg, args):
     batch = SyntheticPipeline(cfg, batch=args.batch,
                               seq=args.prompt_len).device_batch(0)
-
-    prefill = jax.jit(make_prefill_step(model))
+    # decode headroom: without max_len the cache has prompt-length
+    # capacity and decode writes clamp onto the last slot (wrong tokens)
+    prefill = jax.jit(make_prefill_step(
+        model, max_len=args.prompt_len + args.gen))
     step = jax.jit(make_decode_step(model))
     t0 = time.time()
     last, cache = prefill(params, batch)
@@ -51,6 +80,47 @@ def main():
           f"decoded {args.gen} tokens/seq in {dt:.2f}s "
           f"({args.batch * args.gen / max(dt, 1e-9):.1f} tok/s)")
     print("generated ids (first seq):", gen[0][:16], "...")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--naive", action="store_true",
+                    help="lockstep greedy loop instead of the engine")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="0 -> sized to the trace")
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke if args.smoke else configs.get)(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    if args.naive:
+        run_naive(model, params, cfg, args)
+        return
+
+    reqs = synth_requests(cfg, args.requests, args.prompt_len, args.gen,
+                          args.rate)
+    per_seq = pages_needed(args.prompt_len + args.gen,
+                           args.page_size) + 1
+    n_pages = args.n_pages or (1 + args.batch * per_seq)
+    stats = run_engine(model, params, reqs, batch=args.batch,
+                       page_size=args.page_size, n_pages=n_pages,
+                       realtime=True)
+    print(f"{args.requests} requests ({args.prompt_len}+{args.gen} tok) "
+          f"batch={args.batch} pages={n_pages}x{args.page_size}: "
+          f"{stats['tok_per_s']:.1f} tok/s, "
+          f"TTFT {stats['ttft_mean_s'] * 1e3:.0f} ms, "
+          f"{stats['decode_steps']} decode steps, "
+          f"{stats['prefills']} prefills")
 
 
 if __name__ == "__main__":

@@ -375,9 +375,10 @@ def update_kv_cache(cache, new, slot):
                                        0, 0))
         return lax.cond(in_range, write, lambda c: c, c)
 
-    return jax.shard_map(local, mesh=mesh, in_specs=(spec, new_spec, P()),
-                         out_specs=spec, check_vma=False)(
-                             cache, new, slot)
+    from ..sharding.compat import shard_map_compat
+    return shard_map_compat(local, mesh=mesh, in_specs=(spec, new_spec, P()),
+                            out_specs=spec, check_vma=False)(
+                                cache, new, slot)
 
 
 def _gqa_expand_factor(cfg) -> int:
@@ -451,6 +452,37 @@ def attention_block(p, x, cfg, *, positions, causal=True,
     out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
     out = out @ p["wo"].astype(out.dtype)
     return constrain(out, ("batch", "seq", "act_embed")), new_cache
+
+
+def paged_attention_block(p, x, cfg, *, positions, k_pages, v_pages,
+                          page_table, lengths):
+    """Paged decode attention sub-layer (continuous batching).
+
+    x: (B, 1, D) with *per-request* positions (B, 1) — unlike
+    ``attention_block``'s lockstep scalar ``cache_pos``, every sequence
+    in the batch sits at its own depth.  The new token's K/V is written
+    into its page slot (``page_table[b, len_b // ps]`` at offset
+    ``len_b % ps``) and attention runs over the gathered pages.
+
+    Inactive batch slots carry an all-zero page table, so their writes
+    land on the reserved null page (see serve/kv_cache.py) and never
+    corrupt live data.  Returns (out, k_pages, v_pages).
+    """
+    from ..kernels.paged_attention.ref import paged_attention_ref
+    B, S, D = x.shape
+    assert S == 1, "paged path is decode-only"
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    ps = k_pages.shape[1]
+    bidx = jnp.arange(B)
+    pidx = page_table[bidx, lengths // ps]            # (B,)
+    slot = lengths % ps
+    k_pages = k_pages.at[pidx, slot].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pidx, slot].set(v[:, 0].astype(v_pages.dtype))
+    out = paged_attention_ref(q[:, 0], k_pages, v_pages, page_table,
+                              lengths + 1)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"].astype(out.dtype)
+    return out, k_pages, v_pages
 
 
 def cross_attention_block(p, x, enc_kv, cfg):
@@ -644,9 +676,10 @@ def moe_block(p, x, cfg):
         aux = lax.pmean(aux, "model")   # identical per model shard
         return y, aux
 
-    y, aux = jax.shard_map(local, mesh=mesh, in_specs=(pspec, xspec),
-                           out_specs=(xspec, P()),
-                           check_vma=False)(p, x)
+    from ..sharding.compat import shard_map_compat
+    y, aux = shard_map_compat(local, mesh=mesh, in_specs=(pspec, xspec),
+                              out_specs=(xspec, P()),
+                              check_vma=False)(p, x)
     return constrain(y, ("batch", "seq", "act_embed")), aux
 
 

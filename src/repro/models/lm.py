@@ -379,3 +379,72 @@ class DecoderLM:
         x = C.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
         logits = C.unembed(params["embed"], x, cfg)
         return logits[:, 0], new_cache
+
+    # ------------------------------------------------------------------
+    # paged decode (continuous batching)
+    # ------------------------------------------------------------------
+    def supports_paged_decode(self) -> bool:
+        """Paged decode covers scanned full-attention stacks (the dense
+        GQA family).  Ring-buffer and recurrent-state families have
+        fixed-size caches — paging buys them nothing."""
+        return (self.scanned and self.first_dense == 0
+                and set(self.kinds) == {"attn"}
+                and self.cfg.rope_kind != "mrope")
+
+    def paged_state_specs(self, batch: int, *, n_pages: int,
+                          page_size: int, max_pages_per_seq: int) -> dict:
+        cfg = self.cfg
+        shp = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+               cfg.head_dim)
+        ax = ("layers", None, "kv_seq", "act_heads", None)
+        return {
+            "k_pages": ParamSpec(shp, ax, jnp.bfloat16),
+            "v_pages": ParamSpec(shp, ax, jnp.bfloat16),
+            "page_tables": ParamSpec((batch, max_pages_per_seq),
+                                     ("batch", None), jnp.int32),
+            "lengths": ParamSpec((batch,), ("batch",), jnp.int32),
+        }
+
+    def decode_step_paged(self, params, state, tokens):
+        """One continuous-batching decode step against a paged KV cache.
+
+        ``state``: {k_pages, v_pages: (L, P, ps, KVH, Dh); page_tables:
+        (B, n) int32; lengths: (B,) int32}.  ``tokens``: (B, 1).  Each
+        sequence decodes at its own position ``lengths[b]`` (no
+        lockstep).  Returns (logits (B, V), new state) with lengths
+        advanced; callers that mask inactive slots (the serve engine)
+        own the authoritative lengths host-side.
+        """
+        assert self.supports_paged_decode()
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        lengths = state["lengths"]
+        tables = state["page_tables"]
+        positions = lengths[:, None].astype(jnp.int32)
+        x = self._embed_inputs(
+            params, {"tokens": tokens, "positions": positions}, dtype)
+        use_moe = cfg.moe is not None
+
+        def body(x, inp):
+            lp, kp, vp = inp
+            h = C.apply_norm(lp["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+            mix, kp, vp = C.paged_attention_block(
+                lp["mix"], h, cfg, positions=positions, k_pages=kp,
+                v_pages=vp, page_table=tables, lengths=lengths)
+            x = x + mix
+            h2 = C.apply_norm(lp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+            if use_moe:
+                f, _ = C.moe_block(lp["ffn"], h2, cfg)
+            else:
+                f = C.mlp_block(lp["ffn"], h2, cfg)
+            return x + f, (kp, vp)
+
+        x, (k_pages, v_pages) = lax.scan(
+            body, x, (params["layers"], state["k_pages"],
+                      state["v_pages"]))
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind,
+                         cfg.norm_eps)
+        logits = C.unembed(params["embed"], x, cfg)
+        return logits[:, 0], {"k_pages": k_pages, "v_pages": v_pages,
+                              "page_tables": tables,
+                              "lengths": lengths + 1}

@@ -1,0 +1,6 @@
+from .kv_cache import PagedKVCache  # noqa: F401
+from .scheduler import Request, ServeEngine  # noqa: F401
+from .step import (  # noqa: F401
+    greedy_generate, make_decode_step, make_paged_decode_step,
+    make_prefill_step,
+)

@@ -1,0 +1,164 @@
+"""Paged KV cache: fixed-size pages, a free-list allocator, and
+per-slot page tables.
+
+This is the paper's "which operand stays resident" question applied to
+decode: the KV cache is the stationary operand, and paging lets its
+residency be managed per 16-token block instead of per max-length
+sequence.  A request holds exactly ``ceil(len / page_size)`` pages at
+any moment, so heavy-traffic decode packs many more sequences into the
+same HBM than contiguous max-length allocation would.
+
+Device layout (for a scanned all-attention stack of L layers):
+
+    k_pages, v_pages : (L, n_pages, page_size, KVH, Dh)   bf16
+    page_tables      : (max_batch, max_pages_per_seq)     int32
+    lengths          : (max_batch,)                       int32
+
+Page 0 is reserved as the *null page*: inactive batch slots carry an
+all-zero page table, so their (masked) decode writes land there instead
+of corrupting a live page.  The allocator never hands page 0 out.
+
+The manager is host-side Python (allocation is control flow, not math);
+the page arrays live on device and are updated functionally by the
+decode step / prefill scatter.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PagedKVCache", "pages_needed"]
+
+NULL_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages a sequence of ``n_tokens`` occupies — the sizing helper
+    for ``max_pages_per_seq`` (a request that prefills P tokens and
+    generates G needs ``pages_needed(P + G, page_size)``)."""
+    return max(1, math.ceil(n_tokens / page_size))
+
+
+class PagedKVCache:
+    def __init__(self, model, *, max_batch: int, n_pages: int,
+                 page_size: int, max_pages_per_seq: int):
+        cfg = model.cfg
+        if not (model.scanned and model.first_dense == 0
+                and set(cfg.layer_kinds) == {"attn"}):
+            raise ValueError(
+                "paged KV cache supports scanned all-attention stacks; "
+                f"got layer kinds {set(cfg.layer_kinds)}")
+        if n_pages < 2:
+            raise ValueError("need at least the null page plus one")
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_batch = max_batch
+        self.max_pages_per_seq = max_pages_per_seq
+
+        L = cfg.n_layers
+        shape = (L, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        self.k_pages = jnp.zeros(shape, jnp.bfloat16)
+        self.v_pages = jnp.zeros(shape, jnp.bfloat16)
+
+        # host-side bookkeeping
+        self._free: List[int] = list(range(n_pages - 1, NULL_PAGE, -1))
+        self._tables: Dict[int, List[int]] = {}      # slot -> page ids
+        self.page_tables = np.zeros((max_batch, max_pages_per_seq),
+                                    np.int32)
+        self.lengths = np.zeros((max_batch,), np.int32)
+
+    # ------------------------------------------------------------ alloc
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_needed(n_tokens, self.page_size)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        # prompt pages + one decode-headroom page
+        return self.free_pages >= self.pages_for(prompt_len) + 1
+
+    def _alloc_page(self, slot: int) -> Optional[int]:
+        if not self._free:
+            return None
+        pid = self._free.pop()
+        tbl = self._tables[slot]
+        if len(tbl) >= self.max_pages_per_seq:
+            self._free.append(pid)
+            return None
+        self.page_tables[slot, len(tbl)] = pid
+        tbl.append(pid)
+        return pid
+
+    def alloc_slot(self, slot: int, n_tokens: int) -> bool:
+        """Claim ``ceil(n_tokens / page_size)`` pages for a fresh slot.
+        All-or-nothing; returns False (slot untouched) on exhaustion."""
+        assert slot not in self._tables, f"slot {slot} already allocated"
+        need = self.pages_for(n_tokens)
+        if need > min(self.free_pages, self.max_pages_per_seq):
+            return False
+        self._tables[slot] = []
+        for _ in range(need):
+            pid = self._alloc_page(slot)
+            assert pid is not None    # free list checked above
+        self.lengths[slot] = n_tokens
+        return True
+
+    def ensure_headroom(self, slot: int) -> bool:
+        """Make sure the next token write (at index ``lengths[slot]``)
+        has a page; grows the table by one page at page boundaries.
+        Returns False if the allocator is exhausted (caller preempts)."""
+        need = int(self.lengths[slot]) // self.page_size
+        tbl = self._tables[slot]
+        if need < len(tbl):
+            return True
+        assert need == len(tbl), (need, len(tbl))
+        return self._alloc_page(slot) is not None
+
+    def free_slot(self, slot: int) -> None:
+        """Return every page of ``slot`` to the free list (eviction or
+        completion)."""
+        for pid in self._tables.pop(slot):
+            self._free.append(pid)
+        self.page_tables[slot] = NULL_PAGE
+        self.lengths[slot] = 0
+
+    def used_pages(self, slot: int) -> List[int]:
+        return list(self._tables.get(slot, ()))
+
+    def check_invariants(self) -> None:
+        used = [p for t in self._tables.values() for p in t]
+        assert len(used) == len(set(used)), "page double-booked"
+        assert NULL_PAGE not in used, "null page handed out"
+        assert NULL_PAGE not in self._free, "null page in free list"
+        assert sorted(used + self._free) == list(range(1, self.n_pages)), \
+            "page leak"
+        for slot, tbl in self._tables.items():
+            assert len(tbl) >= self.pages_for(int(self.lengths[slot]))
+
+    # ---------------------------------------------------------- device
+    def write_prefill(self, slot: int, layer_kv: dict) -> None:
+        """Scatter a contiguous prefill cache into this slot's pages.
+
+        ``layer_kv`` is the scanned-stack cache entry from
+        ``model.prefill``: {"k": (L, 1, S, KVH, Dh), "v": ...}.
+        """
+        S = int(self.lengths[slot])
+        ps = self.page_size
+        ids = jnp.asarray(self._tables[slot], jnp.int32)
+        n = len(self._tables[slot])
+        pad = n * ps - S
+        for name, pages in (("k", "k_pages"), ("v", "v_pages")):
+            x = layer_kv[name][:, 0].astype(jnp.bfloat16)   # (L, S, KVH, Dh)
+            if pad:
+                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            x = x.reshape(x.shape[0], n, ps, *x.shape[2:])
+            setattr(self, pages, getattr(self, pages).at[:, ids].set(x))
+
+    def device_tables(self):
+        return jnp.asarray(self.page_tables), jnp.asarray(self.lengths)

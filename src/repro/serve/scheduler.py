@@ -1,0 +1,253 @@
+"""Continuous-batching request scheduler over the paged KV cache.
+
+One jit'd paged-decode program (fixed batch/page shapes) serves an
+ever-changing population of requests: the engine admits waiting
+requests into free batch slots as pages allow, runs prefill for the
+newcomer while in-flight requests keep decoding on the next step, and
+evicts (preempts) the youngest request when the allocator runs dry —
+its pages are freed and it re-queues for recompute-readmission, so the
+engine never deadlocks and older requests always finish.
+
+This is latency-bounded batching in the TPU-serving sense: decode
+throughput comes from keeping the batch full, and the paged cache is
+what keeps admission cheap enough to do that mid-flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .kv_cache import PagedKVCache
+from .step import make_paged_decode_step, make_prefill_step
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int
+    arrival: float = 0.0
+    # engine-filled
+    generated: List[int] = dataclasses.field(default_factory=list)
+    ttft: Optional[float] = None          # first token latency (s)
+    finish_time: Optional[float] = None
+    n_preemptions: int = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_time is not None
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 n_pages: int = 128, page_size: int = 16,
+                 max_pages_per_seq: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        if not model.supports_paged_decode():
+            raise ValueError(f"{model.cfg.name}: paged decode unsupported "
+                             "(needs a scanned all-attention stack)")
+        if max_pages_per_seq is None:
+            # correct for any admissible request; size it from the
+            # trace (kv_cache.pages_needed) when the wider page tables
+            # cost too much gather bandwidth
+            max_pages_per_seq = n_pages - 1
+        self.model, self.params = model, params
+        self.eos_id = eos_id
+        self.cache = PagedKVCache(model, max_batch=max_batch,
+                                  n_pages=n_pages, page_size=page_size,
+                                  max_pages_per_seq=max_pages_per_seq)
+        self.max_batch = max_batch
+        self._decode = jax.jit(make_paged_decode_step(model))
+        self._prefill = jax.jit(make_prefill_step(model))
+        self.waiting: deque[Request] = deque()
+        self.active: Dict[int, Request] = {}      # slot -> request
+        self._admit_seq: Dict[int, int] = {}      # slot -> admission order
+        self._admit_counter = 0
+        self.finished: List[Request] = []
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+        self.n_replay_steps = 0
+
+    # --------------------------------------------------------- frontend
+    def submit(self, req: Request) -> None:
+        """Queue a request; rejects (ValueError) one that could never
+        be admitted — otherwise the engine would spin on it forever.
+        The budget reserves can_admit's +1 decode-headroom page (a
+        preempted request must be re-admittable at its longest)."""
+        need = self.cache.pages_for(len(req.prompt) + req.max_new_tokens)
+        budget = min(self.cache.max_pages_per_seq, self.cache.n_pages - 2)
+        if need > budget:
+            raise ValueError(
+                f"request {req.rid}: {len(req.prompt)}+{req.max_new_tokens}"
+                f" tokens need {need} pages of {self.cache.page_size};"
+                f" per-request page budget is {budget}")
+        self.waiting.append(req)
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self.waiting) + len(self.active)
+
+    # --------------------------------------------------------- internals
+    def _free_slot_id(self) -> Optional[int]:
+        for s in range(self.max_batch):
+            if s not in self.active:
+                return s
+        return None
+
+    def _finish(self, slot: int, now: float) -> None:
+        req = self.active.pop(slot)
+        self._admit_seq.pop(slot)
+        self.cache.free_slot(slot)
+        req.finish_time = now
+        self.finished.append(req)
+
+    def _preempt_youngest(self, now: float) -> Optional[int]:
+        """Evict the most recently admitted request: free its pages and
+        push it to the front of the queue for recompute-readmission."""
+        if not self.active:
+            return None
+        slot = max(self._admit_seq, key=self._admit_seq.get)
+        req = self.active.pop(slot)
+        self._admit_seq.pop(slot)
+        self.cache.free_slot(slot)
+        req.n_preemptions += 1
+        self.waiting.appendleft(req)
+        return slot
+
+    def _admit_one(self, now: float) -> bool:
+        if not self.waiting or self.waiting[0].arrival > now:
+            return False
+        slot = self._free_slot_id()
+        if slot is None:
+            return False
+        req = self.waiting[0]
+        if not self.cache.can_admit(len(req.prompt) + len(req.generated)):
+            return False
+        self.waiting.popleft()
+        if not self.cache.alloc_slot(slot, len(req.prompt)):
+            raise RuntimeError("allocation failed after can_admit")
+        # prefill interleaves with in-flight decode at step granularity
+        last, kv = self._prefill(self.params,
+                                 {"tokens": req.prompt[None]})
+        self.cache.write_prefill(slot, kv["layers"]["kv"])
+        self.n_prefills += 1
+        if req.generated:
+            # recompute-readmission after preemption: replay the
+            # already-generated tokens through the *same* decode
+            # program, reproducing the original token stream exactly
+            # (re-prefilling prompt+generated instead would cross the
+            # chunked-prefill/step-decode numerics boundary and can
+            # flip near-tie argmaxes)
+            self._replay(slot, req.generated[:-1])
+        else:
+            tok = int(np.argmax(np.asarray(last[0])))
+            req.generated.append(tok)
+        if req.ttft is None:
+            req.ttft = now - req.arrival
+        self.active[slot] = req
+        self._admit_seq[slot] = self._admit_counter
+        self._admit_counter += 1
+        if self._done(req):
+            self._finish(slot, now)
+        return True
+
+    def _replay(self, slot: int, tokens) -> None:
+        """Write ``tokens`` into ``slot``'s pages via single-slot decode
+        steps (all other rows masked to the null page)."""
+        for t in tokens:
+            if not self.cache.ensure_headroom(slot):
+                raise RuntimeError(
+                    "replay allocation failed despite admission reserve")
+            toks = np.zeros((self.max_batch, 1), np.int32)
+            toks[slot, 0] = t
+            tables = np.zeros_like(self.cache.page_tables)
+            tables[slot] = self.cache.page_tables[slot]
+            lengths = np.zeros_like(self.cache.lengths)
+            lengths[slot] = self.cache.lengths[slot]
+            state = {"k_pages": self.cache.k_pages,
+                     "v_pages": self.cache.v_pages,
+                     "page_tables": jax.numpy.asarray(tables),
+                     "lengths": jax.numpy.asarray(lengths)}
+            _, state = self._decode(self.params, state,
+                                    jax.numpy.asarray(toks))
+            self.cache.k_pages = state["k_pages"]
+            self.cache.v_pages = state["v_pages"]
+            self.cache.lengths[slot] += 1
+            self.n_replay_steps += 1
+
+    def _done(self, req: Request) -> bool:
+        return (len(req.generated) >= req.max_new_tokens
+                or (self.eos_id is not None
+                    and req.generated[-1] == self.eos_id))
+
+    # ------------------------------------------------------------- step
+    def step(self, now: float = float("inf")) -> bool:
+        """One engine iteration: admit what fits, then one batched
+        decode step over every active slot.  Returns True while any
+        work remains (queued or in flight)."""
+        while self._admit_one(now):
+            pass
+        if not self.active:
+            return bool(self.waiting)
+
+        # page headroom for this step's token writes; evict on pressure
+        for slot in sorted(self.active):
+            while slot in self.active and \
+                    not self.cache.ensure_headroom(slot):
+                victim = self._preempt_youngest(now)
+                if victim is None or not self.active:
+                    raise RuntimeError(
+                        "single request exceeds total page budget")
+
+        if not self.active:          # pressure evicted everyone
+            return bool(self.waiting)
+
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.generated[-1]
+        tables, lengths = self.cache.device_tables()
+        state = {"k_pages": self.cache.k_pages,
+                 "v_pages": self.cache.v_pages,
+                 "page_tables": tables, "lengths": lengths}
+        nxt, state = self._decode(self.params, state,
+                                  jax.numpy.asarray(tokens))
+        self.cache.k_pages = state["k_pages"]
+        self.cache.v_pages = state["v_pages"]
+        self.n_decode_steps += 1
+        nxt = np.asarray(nxt)
+        for slot in list(self.active):
+            req = self.active[slot]
+            req.generated.append(int(nxt[slot, 0]))
+            self.cache.lengths[slot] += 1
+            if self._done(req):
+                self._finish(slot, now)
+        return bool(self.active or self.waiting)
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: List[Request], *,
+            realtime: bool = False) -> List[Request]:
+        """Drive to completion; returns the requests completed by THIS
+        call (the engine is reusable — e.g. a warmup run then a
+        measured run).  ``realtime=False`` ignores arrival times (admit
+        ASAP — tests / max-throughput); ``realtime=True`` replays them
+        against the wall clock (benchmarks / TTFT)."""
+        first = len(self.finished)
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while True:
+            now = (time.perf_counter() - t0) if realtime else float("inf")
+            if not self.step(now=now):
+                break
+            if realtime and not self.active and self.waiting:
+                time.sleep(max(0.0,
+                               self.waiting[0].arrival
+                               - (time.perf_counter() - t0)))
+        return self.finished[first:]

@@ -1,5 +1,14 @@
 """Serving steps: prefill (full-sequence -> cache) and decode (one token
-against the cache), plus a simple batched greedy loop for the examples.
+against the cache).
+
+Two decode flavors:
+
+* ``make_decode_step`` — lockstep batch against a contiguous cache; its
+  ``greedy_generate`` driver is the *parity oracle* the continuous-
+  batching engine (serve/scheduler.py) is token-exact against.
+* ``make_paged_decode_step`` — per-request positions against a paged KV
+  cache (serve/kv_cache.py); one jit'd program serves every mix of
+  requests because the batch/page shapes are fixed.
 """
 from __future__ import annotations
 
@@ -8,7 +17,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+__all__ = ["make_prefill_step", "make_decode_step",
+           "make_paged_decode_step", "greedy_generate"]
 
 
 def make_prefill_step(model, max_len=None) -> Callable:
@@ -26,6 +36,17 @@ def make_decode_step(model, sample: str = "greedy") -> Callable:
             raise ValueError(sample)
         return nxt[:, None], cache
     return serve_step
+
+
+def make_paged_decode_step(model, sample: str = "greedy") -> Callable:
+    def paged_step(params, state, tokens):
+        logits, state = model.decode_step_paged(params, state, tokens)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], state
+    return paged_step
 
 
 def greedy_generate(model, params, prompt_batch, n_steps: int,

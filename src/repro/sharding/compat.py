@@ -1,0 +1,24 @@
+"""Version compatibility for the sharding APIs this repo uses.
+
+jax >= 0.5 exposes ``jax.shard_map(..., check_vma=...)``; the pinned
+0.4.37 has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+``shard_map_compat`` takes the new-style signature and translates.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map_compat"]
+
+if hasattr(jax, "shard_map"):
+    def shard_map_compat(f, *, mesh, in_specs, out_specs,
+                         check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map_compat(f, *, mesh, in_specs, out_specs,
+                         check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -1,0 +1,106 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface
+this suite uses (``given`` / ``settings`` / ``strategies``), installed by
+conftest.py only when the real package is absent.
+
+It is *not* a property-based testing engine: no shrinking, no example
+database — just deterministic pseudo-random example generation so the
+property tests still exercise many inputs per run.  The draw sequence is
+seeded from the test name, so failures are reproducible.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import zlib
+
+__version__ = "0.0-fallback"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements.example_from(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+class strategies:
+    """Namespace mirror so ``from hypothesis import strategies as st``
+    and ``st.integers`` both resolve."""
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(f):
+        f._fallback_max_examples = max_examples
+        return f
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(f):
+        n = getattr(f, "_fallback_max_examples", 20)
+        params = list(inspect.signature(f).parameters)
+        # hypothesis semantics: positional strategies fill the RIGHTMOST
+        # non-keyword-strategy params; anything left over is a pytest
+        # fixture the runner must request by exposing it in its own
+        # signature.
+        non_kw = [p for p in params if p not in kw_strategies]
+        pos_names = non_kw[len(non_kw) - len(arg_strategies):] \
+            if arg_strategies else []
+        fixture_names = [p for p in non_kw if p not in pos_names]
+
+        def runner(**fixtures):
+            rnd = random.Random(zlib.crc32(f.__qualname__.encode()))
+            for i in range(n):
+                drawn = {name: s.example_from(rnd)
+                         for name, s in zip(pos_names, arg_strategies)}
+                drawn.update((k, s.example_from(rnd))
+                             for k, s in kw_strategies.items())
+                try:
+                    f(**fixtures, **drawn)
+                except BaseException:
+                    print(f"[hypothesis-fallback] falsifying example "
+                          f"#{i}: {drawn!r}")
+                    raise
+
+        runner.__signature__ = inspect.Signature(
+            [inspect.Parameter(name, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+             for name in fixture_names])
+        # plain attribute copy (functools.wraps would set __wrapped__,
+        # making pytest see the strategy params as fixture requests)
+        runner.__name__ = f.__name__
+        runner.__qualname__ = f.__qualname__
+        runner.__doc__ = f.__doc__
+        runner.__module__ = f.__module__
+        return runner
+    return deco

@@ -1,0 +1,19 @@
+"""Suite-wide setup: make ``import hypothesis`` always resolvable.
+
+Real hypothesis (a declared test dependency, see pyproject.toml) is
+preferred; hermetic environments without it fall back to the minimal
+deterministic shim so all test modules still collect and run.
+"""
+import importlib.util
+import sys
+from pathlib import Path
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", Path(__file__).parent / "_hypothesis_fallback.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

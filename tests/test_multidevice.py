@@ -38,8 +38,8 @@ def test_train_step_runs_on_mesh():
         from repro.train.step import make_train_step
         from repro.train.optimizer import init_opt_state, opt_state_specs
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = configs.get_smoke("llama4-scout-17b-a16e")
         model = build_model(cfg)
         pspecs = model.param_specs()
@@ -77,8 +77,8 @@ def test_moe_shardmap_matches_single_device():
         batch = SyntheticPipeline(cfg, batch=8, seq=32).device_batch(0)
         # single-device reference (local _moe_compute path)
         ref, _ = model.apply(params, batch, train=False)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         with mesh:
             got, _ = jax.jit(lambda p, b: model.apply(p, b, train=False)
                              )(params, batch)
@@ -99,8 +99,8 @@ def test_checkpoint_elastic_restore_8_to_4():
         from repro.checkpoint import save_checkpoint, restore_checkpoint
         from repro.runtime import plan_elastic_mesh
 
-        mesh8 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh8 = make_mesh((2, 4), ("data", "model"))
         x = jax.device_put(np.arange(64.0).reshape(8, 8),
                            NamedSharding(mesh8, P("data", "model")))
         d = tempfile.mkdtemp()
@@ -131,8 +131,8 @@ def test_decode_runs_sharded_with_kv_seq_partitioning():
         from repro.sharding import tree_shardings
         from repro.data.pipeline import SyntheticPipeline
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = configs.get_smoke("qwen3-0.6b")
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))

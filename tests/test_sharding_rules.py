@@ -11,8 +11,8 @@ pytestmark = pytest.mark.skipif(len(jax.devices()) != 1,
 
 
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_single_device_mesh_never_shards():
