@@ -17,7 +17,7 @@ import time
 
 from . import (fig11_util, fig13_traffic, fig15_energy, fig19_sparse,
                fig22_simd, fig23_scaling, kernel_dataflow, roofline,
-               serve_throughput, table5_cisc, table6_static)
+               serve_prefix, serve_throughput, table5_cisc, table6_static)
 
 BENCHES = {
     "table5": table5_cisc.run,
@@ -31,6 +31,7 @@ BENCHES = {
     "kernel": kernel_dataflow.run,
     "roofline": roofline.run,
     "serve": serve_throughput.run,
+    "serve_prefix": serve_prefix.run,
 }
 
 

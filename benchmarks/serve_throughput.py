@@ -92,10 +92,13 @@ def run(smoke: bool = False, batch: int = 8) -> dict:
                               rate=500.0, seed=1)
 
     naive_trace = _make_naive(model, params, prompt_len + gen)
+    # max-throughput configuration: chunk pacing is a TTFT knob, so
+    # size the chunk to cover the whole prompt (single-chunk prefill)
     eng = ServeEngine(model, params, max_batch=batch, n_pages=n_pages,
                       page_size=page_size,
                       max_pages_per_seq=pages_needed(
-                          prompt_len + gen, page_size))
+                          prompt_len + gen, page_size),
+                      chunk_size=prompt_len)
 
     # warmup: both paths compile outside the timed region (the engine
     # object is reused, so its jit caches carry over)

@@ -1,8 +1,12 @@
-"""Serving example, two tiers:
+"""Serving example, three tiers:
 
-1. Continuous-batching engine (paged KV cache) on the dense-GQA arch:
-   staggered request lengths, mid-flight admission, per-request TTFT.
-2. Lockstep greedy loop across the other cache families (ring-buffer
+1. Continuous-batching engine (paged KV cache, chunked prefill) on the
+   dense-GQA arch: staggered request lengths, mid-flight admission,
+   per-request TTFT.
+2. Prefix sharing: the same engine under a shared system prompt —
+   requests after the first reuse its KV pages (copy-on-write guards
+   the tail) instead of recomputing them.
+3. Lockstep greedy loop across the other cache families (ring-buffer
    local attention, recurrent state) — fixed-size states don't page.
 
     PYTHONPATH=src python examples/serve_batched.py
@@ -35,7 +39,7 @@ def engine_demo():
                     max_new_tokens=12)
             for i, sl in enumerate([24, 48, 16, 40, 32, 20])]
     eng = ServeEngine(model, params, max_batch=4, n_pages=64,
-                      page_size=8)
+                      page_size=8, chunk_size=16)
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
@@ -43,10 +47,41 @@ def engine_demo():
     print(f"qwen3-0.6b[engine]     {len(done)} reqs "
           f"(prompts 16..48) -> {toks} tok in {dt * 1e3:6.0f} ms; "
           f"{eng.n_decode_steps} batched decode steps, "
-          f"{eng.n_prefills} prefills")
+          f"{eng.n_prefill_chunks} prefill chunks")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req{r.rid}: prompt {len(r.prompt):2d} tok, "
               f"ids={r.generated[:6]}")
+
+
+def prefix_demo():
+    """Six requests sharing a 28-token system prompt: the first pays
+    its prefill, the other five attach the cached pages.  The prefix
+    straddles a page boundary (28 = 3.5 pages of 8) so each sharing
+    request also exercises the copy-on-write fork of the partial
+    page."""
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=(28,)).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab_size,
+                                      size=(8,)).astype(np.int32)]),
+                    max_new_tokens=8)
+            for i in range(6)]
+    eng = ServeEngine(model, params, max_batch=4, n_pages=64,
+                      page_size=8, chunk_size=16)
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    c = eng.cache
+    print(f"qwen3-0.6b[prefix]     {len(done)} reqs sharing a 28-tok "
+          f"system prompt -> {dt * 1e3:6.0f} ms; "
+          f"{c.n_shared_tokens} prompt tokens served from cache, "
+          f"{c.n_cow} COW copies, "
+          f"{eng.n_prefill_chunks} prefill chunks")
 
 
 def lockstep_demo():
@@ -75,6 +110,7 @@ def lockstep_demo():
 
 def main():
     engine_demo()
+    prefix_demo()
     lockstep_demo()
 
 

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve to real files.
+
+Scans every tracked *.md for inline links and fails with a listing of
+dangling ones.  External links (scheme://, mailto:) and pure anchors
+are skipped; a `path#fragment` link only checks the path.  Run from
+anywhere:
+
+    python scripts/check_md_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def check(root: Path) -> int:
+    bad = []
+    md_files = [p for p in root.rglob("*.md")
+                if ".git" not in p.parts and "results" not in p.parts]
+    n_links = 0
+    for md in md_files:
+        for m in LINK.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            n_links += 1
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                bad.append(f"{md.relative_to(root)}: ({target})")
+    if bad:
+        print(f"{len(bad)} dangling markdown link(s):")
+        for b in bad:
+            print(f"  {b}")
+        return 1
+    print(f"{len(md_files)} markdown files, {n_links} intra-repo links, "
+          "all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(ROOT))

@@ -12,6 +12,27 @@ output-stationary, like All-Reuse.
 Pages beyond a sequence's length are skipped entirely (``pl.when``),
 the paged analogue of Sparse PC Inc: work that is not addressed is
 never issued.
+
+Scalar-prefetch layout invariants (the contract with
+serve/kv_cache.py — also see docs/ARCHITECTURE.md):
+
+* ``page_tables`` and ``lengths`` ride in SMEM via
+  ``PrefetchScalarGridSpec(num_scalar_prefetch=2)``: they are read at
+  *grid-index-map time* to compute each step's page address, so they
+  must be int32 and host-final before the call — the kernel never
+  validates them.
+* Every table entry must name a real page or the null page 0; the
+  index map DMAs whatever page it is told.  Slots past a sequence's
+  last page may contain anything (the ``i * ps < length`` guard skips
+  them), but must still be in-range.
+* ``lengths[b]`` counts *attendable* tokens including the one just
+  written.  Tokens past ``length`` inside the final page are masked to
+  -1e30 before the running max, so stale lanes contribute exact zeros
+  — the same invariant the jnp reference (ref.py) and the engine's
+  token-parity guarantee rely on.
+* (m, l, acc) scratch lives in VMEM across the page sweep
+  (output-stationary, All-Reuse in the paper's terms); the output is
+  written once on the last grid step.
 """
 from __future__ import annotations
 

@@ -3,6 +3,9 @@ cache (default), or the naive lockstep loop (--naive) for comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 16 --batch 8 --prompt-len 64 --gen 32 --rate 50
+
+Engine knobs (chunk size, page size, context buckets, prefix sharing)
+are documented in docs/serving.md.
 """
 from __future__ import annotations
 
@@ -21,28 +24,43 @@ from repro.serve.step import make_decode_step, make_prefill_step
 
 
 def synth_requests(cfg, n: int, prompt_len: int, gen: int,
-                   rate: float, seed: int = 0):
+                   rate: float, seed: int = 0, prefix_len: int = 0):
     """Poisson arrival trace with markov-ish prompts (same generator
-    family as the training pipeline)."""
+    family as the training pipeline).  ``prefix_len`` > 0 prepends one
+    shared system-prompt prefix to every request (the prefix-cache
+    benchmark shape)."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+    def walk(length):
+        base = rng.integers(0, cfg.vocab_size)
+        drift = rng.integers(0, 17, size=length)
+        return ((base + np.cumsum(drift)) % cfg.vocab_size).astype(np.int32)
+
+    # draw the prefix only when asked, so prefix_len=0 traces stay
+    # draw-for-draw identical to earlier benchmarks at the same seed
+    prefix = walk(prefix_len) if prefix_len else None
     reqs = []
     for i in range(n):
-        base = rng.integers(0, cfg.vocab_size)
-        drift = rng.integers(0, 17, size=prompt_len)
-        prompt = ((base + np.cumsum(drift)) % cfg.vocab_size).astype(np.int32)
+        prompt = walk(prompt_len)
+        if prefix is not None:
+            prompt = np.concatenate([prefix, prompt])
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gen,
                             arrival=float(arrivals[i])))
     return reqs
 
 
 def run_engine(model, params, reqs, *, batch, page_size, n_pages,
-               realtime):
+               realtime, chunk_size=32, prefix_sharing=True,
+               bucket_edges=None):
     eng = ServeEngine(model, params, max_batch=batch, n_pages=n_pages,
                       page_size=page_size,
                       max_pages_per_seq=max(
                           pages_needed(len(r.prompt) + r.max_new_tokens,
-                                       page_size) for r in reqs))
+                                       page_size) for r in reqs),
+                      chunk_size=chunk_size,
+                      prefix_sharing=prefix_sharing,
+                      bucket_edges=bucket_edges)
     t0 = time.perf_counter()
     done = eng.run(reqs, realtime=realtime)
     dt = time.perf_counter() - t0
@@ -53,7 +71,9 @@ def run_engine(model, params, reqs, *, batch, page_size, n_pages,
             "tok_per_s": toks / max(dt, 1e-9),
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
             "decode_steps": eng.n_decode_steps,
-            "prefills": eng.n_prefills}
+            "prefill_chunks": eng.n_prefill_chunks,
+            "shared_tokens": eng.cache.n_shared_tokens,
+            "cow_copies": eng.cache.n_cow}
 
 
 def run_naive(model, params, cfg, args):
@@ -90,6 +110,9 @@ def main():
                     help="lockstep greedy loop instead of the engine")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt shared by every "
+                         "request (exercises the prefix cache)")
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=50.0,
@@ -97,6 +120,14 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=0,
                     help="0 -> sized to the trace")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="prompt tokens ingested per engine step")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the prefix cache (recompute every "
+                         "prompt from scratch)")
+    ap.add_argument("--bucket-edges", type=str, default="",
+                    help="comma-separated context buckets in pages "
+                         "(default: doubling)")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke if args.smoke else configs.get)(args.arch)
@@ -108,19 +139,28 @@ def main():
         return
 
     reqs = synth_requests(cfg, args.requests, args.prompt_len, args.gen,
-                          args.rate)
-    per_seq = pages_needed(args.prompt_len + args.gen,
-                           args.page_size) + 1
-    n_pages = args.n_pages or (1 + args.batch * per_seq)
+                          args.rate, prefix_len=args.shared_prefix)
+    total = args.shared_prefix + args.prompt_len + args.gen
+    per_seq = pages_needed(total, args.page_size) + 1
+    n_pages = args.n_pages or (1 + args.batch * per_seq
+                               + pages_needed(max(args.shared_prefix, 1),
+                                              args.page_size))
+    edges = ([int(e) for e in args.bucket_edges.split(",")]
+             if args.bucket_edges else None)
     stats = run_engine(model, params, reqs, batch=args.batch,
                        page_size=args.page_size, n_pages=n_pages,
-                       realtime=True)
-    print(f"{args.requests} requests ({args.prompt_len}+{args.gen} tok) "
+                       realtime=True, chunk_size=args.chunk_size,
+                       prefix_sharing=not args.no_prefix_sharing,
+                       bucket_edges=edges)
+    print(f"{args.requests} requests ({args.shared_prefix}+"
+          f"{args.prompt_len}+{args.gen} tok) "
           f"batch={args.batch} pages={n_pages}x{args.page_size}: "
           f"{stats['tok_per_s']:.1f} tok/s, "
           f"TTFT {stats['ttft_mean_s'] * 1e3:.0f} ms, "
           f"{stats['decode_steps']} decode steps, "
-          f"{stats['prefills']} prefills")
+          f"{stats['prefill_chunks']} prefill chunks, "
+          f"{stats['shared_tokens']} prefix tokens reused, "
+          f"{stats['cow_copies']} COW copies")
 
 
 if __name__ == "__main__":

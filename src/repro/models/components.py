@@ -211,15 +211,28 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
 
     ``q_offset`` is the absolute position of q[0] (decode / chunked use).
     Returns (B,Sq,H,Dh).
+
+    The KV chunk partition is *anchored at absolute position 0 with a
+    fixed chunk size*: a ragged Skv is padded up to a multiple of
+    ``kv_chunk`` and the padded lanes are masked, rather than shrinking
+    the chunk size to a divisor of Skv.  Fully-masked lanes are exact
+    no-ops for the online-softmax recurrence (max against -1e30 cannot
+    win, exp underflows to +0.0, and x+0.0 == x bitwise), so attention
+    over a *longer* buffer with the same leading keys produces
+    bit-identical outputs.  The serve engine's chunked prefill
+    (models/lm.py:prefill_chunk_paged) leans on exactly this: it runs
+    the same partition over a gathered page buffer and stays token-exact
+    against whole-prompt prefill.
     """
     B, Sq, H, Dh = q.shape
     Skv, KVH = k.shape[1], k.shape[2]
     G = H // KVH
     qh = q.reshape(B, Sq, KVH, G, Dh)          # keep storage dtype
-    kv_chunk = min(kv_chunk, Skv)
-    while Skv % kv_chunk:          # non-power-of-two Skv (whisper's 1500)
-        kv_chunk -= 1
-    n_chunks = Skv // kv_chunk
+    pad = -Skv % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Skv + pad) // kv_chunk
     q_pos = q_offset + jnp.arange(Sq)
     scale = 1.0 / math.sqrt(Dh)
 
@@ -234,7 +247,7 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
         s = jnp.einsum("bqkgd,bjkd->bkgqj", qh, ks,
                        preferred_element_type=jnp.float32) * scale
         k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
-        mask = jnp.ones((Sq, kv_chunk), bool)
+        mask = (k_pos < Skv)[None, :] & jnp.ones((Sq, 1), bool)
         if causal:
             mask &= k_pos[None, :] <= q_pos[:, None]
         if window is not None:
@@ -483,6 +496,47 @@ def paged_attention_block(p, x, cfg, *, positions, k_pages, v_pages,
     out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
     out = out @ p["wo"].astype(out.dtype)
     return out, k_pages, v_pages
+
+
+def paged_chunk_attention_block(p, x, cfg, *, positions, start, n_valid,
+                                k_pages, v_pages, table_row):
+    """Chunked-prefill attention sub-layer over a paged KV cache.
+
+    x: (1, C, D) — one request's next prompt chunk, token t sitting at
+    absolute position ``start + t``; rows with t >= ``n_valid`` are
+    padding (fixed chunk shape -> one jit compile).  ``table_row``:
+    (nb,) int32 — the request's page table truncated to its context
+    bucket, covering every position < start + n_valid.
+
+    Earlier chunks' context is gathered from pages into a contiguous
+    (nb * ps) buffer and the current chunk's K/V is overlaid at its
+    absolute offset with a single dynamic_update_slice (the buffer is
+    padded by C lanes so the last, partial chunk never clamps; the
+    overlaid padding rows land past ``n_valid`` where causal masking
+    hides them).  Attention then runs through ``flash_attention`` with
+    the chunk's absolute ``q_offset``.  Because the flash partition is
+    anchored at absolute position 0 and padded lanes are exact no-ops,
+    this is bit-identical to whole-prompt prefill attention for every
+    valid row — the serve engine's token-parity guarantee rests on it.
+
+    Returns (out, k, v); *the caller owns page persistence* — one
+    stacked scatter after the layer scan is far cheaper than per-layer
+    scatters here (see DecoderLM.prefill_chunk_paged).
+    """
+    B, C, D = x.shape
+    assert B == 1, "chunked prefill ingests one request at a time"
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    kc = k_pages[table_row].reshape(1, -1, *k_pages.shape[2:])
+    vc = v_pages[table_row].reshape(1, -1, *v_pages.shape[2:])
+    kc = jnp.pad(kc, ((0, 0), (0, C), (0, 0), (0, 0)))
+    vc = jnp.pad(vc, ((0, 0), (0, C), (0, 0), (0, 0)))
+    kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, start, 0, 0))
+    vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, start, 0, 0))
+    out = flash_attention(q, kc, vc, causal=True,
+                          kv_chunk=cfg.attn_kv_chunk, q_offset=start)
+    out = out.reshape(B, C, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"].astype(out.dtype)
+    return out, k, v
 
 
 def cross_attention_block(p, x, enc_kv, cfg):

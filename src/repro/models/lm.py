@@ -405,6 +405,70 @@ class DecoderLM:
             "lengths": ParamSpec((batch,), ("batch",), jnp.int32),
         }
 
+    def prefill_chunk_paged(self, params, state, tokens, table_row,
+                            start, n_valid):
+        """Ingest one prompt chunk of a single request into the paged
+        KV cache (chunked prefill).
+
+        ``tokens``: (1, C) — the next C prompt tokens at absolute
+        positions ``start + t``; rows t >= ``n_valid`` are padding
+        (their K/V writes land on the null page).  ``table_row``:
+        (nb,) int32 — the request's page table truncated to its
+        context bucket.  ``start`` / ``n_valid`` are traced scalars, so
+        one compile serves every chunk of every prompt in the bucket.
+        Returns (last-valid-token logits (1, V), new page state).
+
+        Token-exactness: the flash partition is anchored at absolute
+        position 0, the K/V gathered back from pages carry the same
+        bf16 bits whole-prompt prefill would have produced (compute
+        dtype == page dtype), and every other op is per-token — so any
+        chunking of the prompt reproduces ``prefill``'s last-token
+        logits and cache bit-for-bit.
+        """
+        assert self.supports_paged_decode()
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        n = tokens.shape[1]
+        positions = (start + jnp.arange(n, dtype=jnp.int32))[None]
+        x = self._embed_inputs(
+            params, {"tokens": tokens, "positions": positions}, dtype)
+        use_moe = cfg.moe is not None
+
+        def body(x, inp):
+            lp, kp, vp = inp
+            h = C.apply_norm(lp["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+            mix, k, v = C.paged_chunk_attention_block(
+                lp["mix"], h, cfg, positions=positions, start=start,
+                n_valid=n_valid, k_pages=kp, v_pages=vp,
+                table_row=table_row)
+            x = x + mix
+            h2 = C.apply_norm(lp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+            if use_moe:
+                f, _ = C.moe_block(lp["ffn"], h2, cfg)
+            else:
+                f = C.mlp_block(lp["ffn"], h2, cfg)
+            return x + f, (k, v)
+
+        x, (ks, vs) = lax.scan(
+            body, x, (params["layers"], state["k_pages"],
+                      state["v_pages"]))
+        # persist the chunk's K/V for every layer in one stacked
+        # scatter (padding rows t >= n_valid are routed to null page 0)
+        ps_ = state["k_pages"].shape[2]
+        t = jnp.arange(n)
+        abs_pos = start + t
+        pid = jnp.where(t < n_valid, table_row[abs_pos // ps_], 0)
+        slot = abs_pos % ps_
+        k_pages = state["k_pages"].at[:, pid, slot].set(
+            ks[:, 0].astype(state["k_pages"].dtype))
+        v_pages = state["v_pages"].at[:, pid, slot].set(
+            vs[:, 0].astype(state["v_pages"].dtype))
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind,
+                         cfg.norm_eps)
+        last = lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = C.unembed(params["embed"], last, cfg)
+        return logits[:, 0], {"k_pages": k_pages, "v_pages": v_pages}
+
     def decode_step_paged(self, params, state, tokens):
         """One continuous-batching decode step against a paged KV cache.
 

@@ -1,6 +1,7 @@
 from .kv_cache import PagedKVCache  # noqa: F401
-from .scheduler import Request, ServeEngine  # noqa: F401
+from .prefix import PrefixCache  # noqa: F401
+from .scheduler import Request, ServeEngine, default_bucket_edges  # noqa: F401,E501
 from .step import (  # noqa: F401
-    greedy_generate, make_decode_step, make_paged_decode_step,
-    make_prefill_step,
+    greedy_generate, make_chunk_prefill_step, make_decode_step,
+    make_paged_decode_step, make_prefill_step,
 )

@@ -1,12 +1,12 @@
-"""Paged KV cache: fixed-size pages, a free-list allocator, and
-per-slot page tables.
+"""Paged KV cache: fixed-size pages, a free-list allocator, per-slot
+page tables, and copy-on-write prefix sharing.
 
 This is the paper's "which operand stays resident" question applied to
 decode: the KV cache is the stationary operand, and paging lets its
-residency be managed per 16-token block instead of per max-length
-sequence.  A request holds exactly ``ceil(len / page_size)`` pages at
-any moment, so heavy-traffic decode packs many more sequences into the
-same HBM than contiguous max-length allocation would.
+residency be managed per page-size token block instead of per
+max-length sequence.  Prefix sharing extends the same discipline across
+*requests*: identical prompt prefixes map to the same physical pages,
+so N requests carrying one system prompt pay its KV cost once.
 
 Device layout (for a scanned all-attention stack of L layers):
 
@@ -14,25 +14,55 @@ Device layout (for a scanned all-attention stack of L layers):
     page_tables      : (max_batch, max_pages_per_seq)     int32
     lengths          : (max_batch,)                       int32
 
-Page 0 is reserved as the *null page*: inactive batch slots carry an
-all-zero page table, so their (masked) decode writes land there instead
-of corrupting a live page.  The allocator never hands page 0 out.
+Invariants the engine relies on (exercised by check_invariants and
+tests/test_serve_engine.py):
+
+* **Free-list discipline** — every page id in [1, n_pages) is either on
+  the free list or referenced; a page is handed out by exactly one
+  ``_acquire`` per reference and returns to the free list only when its
+  refcount reaches zero.  No page is ever in both states.
+* **Null-page masking** — page 0 is reserved: inactive batch slots and
+  padding chunk rows carry all-zero page tables, so their (masked)
+  writes land on page 0 instead of corrupting a live page.  The
+  allocator never hands page 0 out and the trie never stores it.
+* **Refcount >= 1 while referenced** — a page's refcount equals the
+  number of slot page tables containing it plus one if a prefix-trie
+  node owns it.  Shared pages (refcount > 1) are read-only: any write
+  target with refcount > 1 is copied first (``_cow_page``), so eviction
+  of one reader can never free a page another reader still gathers.
+* **Compute dtype == page dtype** — pages store bf16 and the model
+  computes in bf16, so K/V read back from pages is bit-identical to the
+  in-flight K/V of whole-prompt prefill; the engine's token-parity
+  guarantee (docs/serving.md) depends on this.
 
 The manager is host-side Python (allocation is control flow, not math);
 the page arrays live on device and are updated functionally by the
-decode step / prefill scatter.
+decode step / chunked-prefill scatter.
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+
+from .prefix import PrefixCache
 
 __all__ = ["PagedKVCache", "pages_needed"]
 
 NULL_PAGE = 0
+
+
+@jax.jit
+def _copy_page(pages, src, dst):
+    """pages[:, dst] <- pages[:, src] with *traced* page ids — one
+    compile serves every copy-on-write (baking the ids in as constants
+    would recompile per (src, dst) pair)."""
+    page = lax.dynamic_slice_in_dim(pages, src, 1, axis=1)
+    return lax.dynamic_update_slice_in_dim(pages, page, dst, axis=1)
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
@@ -44,7 +74,8 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 class PagedKVCache:
     def __init__(self, model, *, max_batch: int, n_pages: int,
-                 page_size: int, max_pages_per_seq: int):
+                 page_size: int, max_pages_per_seq: int,
+                 prefix_sharing: bool = True):
         cfg = model.cfg
         if not (model.scanned and model.first_dense == 0
                 and set(cfg.layer_kinds) == {"attn"}):
@@ -66,10 +97,26 @@ class PagedKVCache:
 
         # host-side bookkeeping
         self._free: List[int] = list(range(n_pages - 1, NULL_PAGE, -1))
+        self._ref = np.zeros((n_pages,), np.int32)
         self._tables: Dict[int, List[int]] = {}      # slot -> page ids
         self.page_tables = np.zeros((max_batch, max_pages_per_seq),
                                     np.int32)
         self.lengths = np.zeros((max_batch,), np.int32)
+        self.prefix = PrefixCache(page_size) if prefix_sharing else None
+        # stats
+        self.n_shared_tokens = 0
+        self.n_cow = 0
+        self.n_prefix_evictions = 0
+
+    # ---------------------------------------------------------- refcount
+    def _acquire(self, pid: int) -> None:
+        self._ref[pid] += 1
+
+    def _release(self, pid: int) -> None:
+        self._ref[pid] -= 1
+        assert self._ref[pid] >= 0, f"page {pid} over-released"
+        if self._ref[pid] == 0:
+            self._free.append(pid)
 
     # ------------------------------------------------------------ alloc
     @property
@@ -79,86 +126,156 @@ class PagedKVCache:
     def pages_for(self, n_tokens: int) -> int:
         return pages_needed(n_tokens, self.page_size)
 
-    def can_admit(self, prompt_len: int) -> bool:
-        # prompt pages + one decode-headroom page
-        return self.free_pages >= self.pages_for(prompt_len) + 1
-
     def _alloc_page(self, slot: int) -> Optional[int]:
         if not self._free:
             return None
-        pid = self._free.pop()
         tbl = self._tables[slot]
         if len(tbl) >= self.max_pages_per_seq:
-            self._free.append(pid)
             return None
+        pid = self._free.pop()
+        self._acquire(pid)
         self.page_tables[slot, len(tbl)] = pid
         tbl.append(pid)
         return pid
 
-    def alloc_slot(self, slot: int, n_tokens: int) -> bool:
-        """Claim ``ceil(n_tokens / page_size)`` pages for a fresh slot.
-        All-or-nothing; returns False (slot untouched) on exhaustion."""
+    def _attach_page(self, slot: int, pid: int) -> None:
+        tbl = self._tables[slot]
+        self._acquire(pid)
+        self.page_tables[slot, len(tbl)] = pid
+        tbl.append(pid)
+
+    def alloc_slot(self, slot: int, n_tokens: int, *,
+                   prompt=None, reserve_tokens: int = 0) -> Optional[int]:
+        """Claim pages for a fresh slot holding ``n_tokens`` prompt
+        tokens, sharing any trie-resident prefix of ``prompt``.
+
+        All-or-nothing; returns the number of prefix tokens whose KV is
+        already resident (0 without a hit), or None if the allocator
+        cannot cover the fresh pages plus one decode-headroom page plus
+        ``reserve_tokens`` worth of replay growth (slot untouched).
+        The first write-target page is made private (copy-on-write)
+        before returning, so callers may scatter into
+        ``pages[shared:]`` immediately.
+        """
         assert slot not in self._tables, f"slot {slot} already allocated"
         need = self.pages_for(n_tokens)
-        if need > min(self.free_pages, self.max_pages_per_seq):
-            return False
+        if need > self.max_pages_per_seq:
+            return None
+        matches: List = []
+        shared = 0
+        if prompt is not None and self.prefix is not None:
+            matches, shared = self.prefix.lookup(prompt)
+        fresh = need - len(matches)
+        # a partial last match means position `shared` lands inside a
+        # shared page -> one COW copy at admission
+        cow = 1 if matches and shared < len(matches) * self.page_size \
+            else 0
+        reserve = 1 + (self.pages_for(n_tokens + reserve_tokens) - need)
+        if fresh + cow + reserve > self.free_pages:
+            return None
         self._tables[slot] = []
-        for _ in range(need):
+        for pid, _ in matches:
+            self._attach_page(slot, pid)
+        for _ in range(fresh):
             pid = self._alloc_page(slot)
             assert pid is not None    # free list checked above
-        self.lengths[slot] = n_tokens
+        if cow:
+            copied = self._cow_page(slot, len(matches) - 1)
+            assert copied    # budgeted above
+        self.lengths[slot] = shared
+        self.n_shared_tokens += shared
+        return shared
+
+    def _cow_page(self, slot: int, idx: int) -> bool:
+        """Give ``slot`` a private copy of its ``idx``-th page (no-op if
+        already private).  Returns False if the free list is empty."""
+        pid = self._tables[slot][idx]
+        if self._ref[pid] == 1:
+            return True
+        if not self._free:
+            return False
+        new = self._free.pop()
+        self._acquire(new)
+        self._release(pid)
+        self._tables[slot][idx] = new
+        self.page_tables[slot, idx] = new
+        src, dst = np.int32(pid), np.int32(new)
+        self.k_pages = _copy_page(self.k_pages, src, dst)
+        self.v_pages = _copy_page(self.v_pages, src, dst)
+        self.n_cow += 1
         return True
 
     def ensure_headroom(self, slot: int) -> bool:
         """Make sure the next token write (at index ``lengths[slot]``)
-        has a page; grows the table by one page at page boundaries.
-        Returns False if the allocator is exhausted (caller preempts)."""
+        has a *private* page: grows the table by one page at page
+        boundaries, and copies a shared write target (copy-on-write —
+        the page a finished request donated to the prefix trie must not
+        be mutated by its own donor's decode).  Returns False if the
+        allocator is exhausted (caller preempts or evicts)."""
         need = int(self.lengths[slot]) // self.page_size
         tbl = self._tables[slot]
         if need < len(tbl):
-            return True
+            return self._cow_page(slot, need)
         assert need == len(tbl), (need, len(tbl))
         return self._alloc_page(slot) is not None
 
     def free_slot(self, slot: int) -> None:
-        """Return every page of ``slot`` to the free list (eviction or
-        completion)."""
+        """Drop every page reference of ``slot`` (eviction or
+        completion); pages return to the free list only when no other
+        slot and no trie node still references them."""
         for pid in self._tables.pop(slot):
-            self._free.append(pid)
+            self._release(pid)
         self.page_tables[slot] = NULL_PAGE
         self.lengths[slot] = 0
 
+    # ---------------------------------------------------------- sharing
+    def register_prefix(self, slot: int, prompt) -> None:
+        """Donate ``slot``'s prompt pages to the prefix trie (called
+        once the prompt is fully ingested).  The trie takes its own
+        reference on newly recorded pages, so they outlive the request;
+        the donor's next write into a donated partial page triggers COW
+        like any other shared write."""
+        if self.prefix is None:
+            return
+        for pid in self.prefix.insert(prompt, self._tables[slot]):
+            self._acquire(pid)
+
+    def release_prefix_pages(self, n: int = 1) -> int:
+        """Evict up to ``n`` LRU prefix-trie leaves, dropping their trie
+        references (pages free once no slot uses them).  Returns the
+        number of nodes evicted."""
+        if self.prefix is None:
+            return 0
+        pages = self.prefix.pop_lru_leaves(n)
+        for pid in pages:
+            self._release(pid)
+        self.n_prefix_evictions += len(pages)
+        return len(pages)
+
+    # ------------------------------------------------------- inspection
     def used_pages(self, slot: int) -> List[int]:
         return list(self._tables.get(slot, ()))
 
     def check_invariants(self) -> None:
-        used = [p for t in self._tables.values() for p in t]
-        assert len(used) == len(set(used)), "page double-booked"
-        assert NULL_PAGE not in used, "null page handed out"
+        refs: Dict[int, int] = {}
+        for slot, tbl in self._tables.items():
+            assert len(tbl) == len(set(tbl)), \
+                f"slot {slot} references a page twice"
+            for p in tbl:
+                refs[p] = refs.get(p, 0) + 1
+        trie_pages = self.prefix.pages() if self.prefix is not None else []
+        assert len(trie_pages) == len(set(trie_pages)), \
+            "page owned by two trie nodes"
+        for p in trie_pages:
+            refs[p] = refs.get(p, 0) + 1
+        assert NULL_PAGE not in refs, "null page referenced"
         assert NULL_PAGE not in self._free, "null page in free list"
-        assert sorted(used + self._free) == list(range(1, self.n_pages)), \
-            "page leak"
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list duplicate"
+        for p in range(1, self.n_pages):
+            assert self._ref[p] == refs.get(p, 0), \
+                f"page {p}: refcount {self._ref[p]} != {refs.get(p, 0)}"
+            assert (p in free) == (self._ref[p] == 0), \
+                f"page {p}: free-list / refcount disagree"
         for slot, tbl in self._tables.items():
             assert len(tbl) >= self.pages_for(int(self.lengths[slot]))
-
-    # ---------------------------------------------------------- device
-    def write_prefill(self, slot: int, layer_kv: dict) -> None:
-        """Scatter a contiguous prefill cache into this slot's pages.
-
-        ``layer_kv`` is the scanned-stack cache entry from
-        ``model.prefill``: {"k": (L, 1, S, KVH, Dh), "v": ...}.
-        """
-        S = int(self.lengths[slot])
-        ps = self.page_size
-        ids = jnp.asarray(self._tables[slot], jnp.int32)
-        n = len(self._tables[slot])
-        pad = n * ps - S
-        for name, pages in (("k", "k_pages"), ("v", "v_pages")):
-            x = layer_kv[name][:, 0].astype(jnp.bfloat16)   # (L, S, KVH, Dh)
-            if pad:
-                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            x = x.reshape(x.shape[0], n, ps, *x.shape[2:])
-            setattr(self, pages, getattr(self, pages).at[:, ids].set(x))
-
-    def device_tables(self):
-        return jnp.asarray(self.page_tables), jnp.asarray(self.lengths)

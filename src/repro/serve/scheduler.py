@@ -1,31 +1,61 @@
 """Continuous-batching request scheduler over the paged KV cache.
 
 One jit'd paged-decode program (fixed batch/page shapes) serves an
-ever-changing population of requests: the engine admits waiting
-requests into free batch slots as pages allow, runs prefill for the
-newcomer while in-flight requests keep decoding on the next step, and
-evicts (preempts) the youngest request when the allocator runs dry —
-its pages are freed and it re-queues for recompute-readmission, so the
-engine never deadlocks and older requests always finish.
+ever-changing population of requests.  The request lifecycle is
 
-This is latency-bounded batching in the TPU-serving sense: decode
-throughput comes from keeping the batch full, and the paged cache is
-what keeps admission cheap enough to do that mid-flight.
+    submit -> WAITING -> [admit] -> PREFILLING -> DECODING -> finished
+                  ^                                   |
+                  +--------- preempt (replay) --------+
+
+* **Admission** claims a batch slot and pages; a prompt prefix already
+  resident in the cache's prefix trie is attached read-only
+  (copy-on-write protects it) and skipped by prefill.
+* **Chunked prefill**: prompts ingest through a fixed-shape
+  masked-prefill program in ``chunk_size``-token chunks.  A prompt
+  longer than one chunk advances one chunk per engine step,
+  interleaved with the batched decode step — in-flight decode never
+  stalls for more than one chunk of prefill work — while short prompts
+  admit, ingest, and promote eagerly so the batch ramps at full speed.
+  The program's gathered context length is bucketed (``bucket_edges``,
+  in pages) so each bucket jit-compiles once instead of once per
+  distinct prompt length.
+* **Preemption**: when the allocator runs dry the engine first evicts
+  LRU prefix-trie pages, then the youngest request — its pages are
+  dropped and it re-queues for recompute-readmission (its own prompt
+  usually re-shares from the trie), and its already-generated tokens
+  are replayed through the same decode program, reproducing the
+  original stream exactly.  The engine never deadlocks and older
+  requests always finish.
+
+Every step keeps the token-parity guarantee: generated streams are
+bit-identical to the sequential ``greedy_generate`` oracle (see
+docs/serving.md for what would break it).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Dict, List, Optional
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from .kv_cache import PagedKVCache
-from .step import make_paged_decode_step, make_prefill_step
+from .step import (make_chunk_prefill_step, make_paged_decode_step)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "default_bucket_edges"]
+
+
+def default_bucket_edges(max_pages_per_seq: int) -> List[int]:
+    """Doubling context buckets (in pages): 1, 2, 4, ... capped at the
+    per-request page budget — one chunked-prefill compile per edge."""
+    edges, e = [], 1
+    while e < max_pages_per_seq:
+        edges.append(e)
+        e *= 2
+    edges.append(max_pages_per_seq)
+    return edges
 
 
 @dataclasses.dataclass
@@ -39,6 +69,8 @@ class Request:
     ttft: Optional[float] = None          # first token latency (s)
     finish_time: Optional[float] = None
     n_preemptions: int = 0
+    prefill_pos: int = 0                  # prompt tokens ingested
+    shared_tokens: int = 0                # prefix-cache hit size
 
     @property
     def finished(self) -> bool:
@@ -49,7 +81,10 @@ class ServeEngine:
     def __init__(self, model, params, *, max_batch: int = 8,
                  n_pages: int = 128, page_size: int = 16,
                  max_pages_per_seq: Optional[int] = None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 chunk_size: int = 32,
+                 prefix_sharing: bool = True,
+                 bucket_edges: Optional[Sequence[int]] = None):
         if not model.supports_paged_decode():
             raise ValueError(f"{model.cfg.name}: paged decode unsupported "
                              "(needs a scanned all-attention stack)")
@@ -62,25 +97,37 @@ class ServeEngine:
         self.eos_id = eos_id
         self.cache = PagedKVCache(model, max_batch=max_batch,
                                   n_pages=n_pages, page_size=page_size,
-                                  max_pages_per_seq=max_pages_per_seq)
+                                  max_pages_per_seq=max_pages_per_seq,
+                                  prefix_sharing=prefix_sharing)
         self.max_batch = max_batch
+        self.chunk_size = chunk_size
+        if bucket_edges is None:
+            bucket_edges = default_bucket_edges(max_pages_per_seq)
+        self.bucket_edges = sorted(set(int(b) for b in bucket_edges))
+        if self.bucket_edges[-1] < max_pages_per_seq:
+            self.bucket_edges.append(max_pages_per_seq)
         self._decode = jax.jit(make_paged_decode_step(model))
-        self._prefill = jax.jit(make_prefill_step(model))
+        # one jit wrapper; re-specializes per (bucket) table shape
+        self._chunk = jax.jit(make_chunk_prefill_step(model))
         self.waiting: deque[Request] = deque()
-        self.active: Dict[int, Request] = {}      # slot -> request
+        self.prefilling: "OrderedDict[int, Request]" = OrderedDict()
+        self.active: Dict[int, Request] = {}      # slot -> DECODING req
         self._admit_seq: Dict[int, int] = {}      # slot -> admission order
         self._admit_counter = 0
         self.finished: List[Request] = []
         self.n_decode_steps = 0
-        self.n_prefills = 0
+        self.n_prefill_chunks = 0
         self.n_replay_steps = 0
 
     # --------------------------------------------------------- frontend
     def submit(self, req: Request) -> None:
         """Queue a request; rejects (ValueError) one that could never
         be admitted — otherwise the engine would spin on it forever.
-        The budget reserves can_admit's +1 decode-headroom page (a
+        The budget reserves alloc_slot's +1 decode-headroom page (a
         preempted request must be re-admittable at its longest)."""
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt (there is "
+                             "no last-token logit to seed generation)")
         need = self.cache.pages_for(len(req.prompt) + req.max_new_tokens)
         budget = min(self.cache.max_pages_per_seq, self.cache.n_pages - 2)
         if need > budget:
@@ -92,12 +139,12 @@ class ServeEngine:
 
     @property
     def n_inflight(self) -> int:
-        return len(self.waiting) + len(self.active)
+        return len(self.waiting) + len(self.prefilling) + len(self.active)
 
     # --------------------------------------------------------- internals
     def _free_slot_id(self) -> Optional[int]:
         for s in range(self.max_batch):
-            if s not in self.active:
+            if s not in self.active and s not in self.prefilling:
                 return s
         return None
 
@@ -108,63 +155,124 @@ class ServeEngine:
         req.finish_time = now
         self.finished.append(req)
 
-    def _preempt_youngest(self, now: float) -> Optional[int]:
-        """Evict the most recently admitted request: free its pages and
-        push it to the front of the queue for recompute-readmission."""
-        if not self.active:
+    def _preempt_youngest(self, now: float,
+                          exclude: Optional[int] = None) -> Optional[int]:
+        """Evict the most recently admitted request (prefilling or
+        decoding): drop its page references and push it to the front of
+        the queue for recompute-readmission.  ``exclude`` protects one
+        slot (the one being replayed) from evicting itself."""
+        candidates = [s for s in self._admit_seq if s != exclude]
+        if not candidates:
             return None
-        slot = max(self._admit_seq, key=self._admit_seq.get)
-        req = self.active.pop(slot)
+        slot = max(candidates, key=self._admit_seq.get)
+        req = (self.prefilling.pop(slot, None)
+               or self.active.pop(slot, None))
         self._admit_seq.pop(slot)
         self.cache.free_slot(slot)
         req.n_preemptions += 1
+        req.prefill_pos = 0
         self.waiting.appendleft(req)
         return slot
 
     def _admit_one(self, now: float) -> bool:
         if not self.waiting or self.waiting[0].arrival > now:
             return False
+        if self.prefilling:
+            # prefill is head-of-queue serialized (one chunk per step),
+            # so admitting behind an unfinished prompt would only pin
+            # pages early — and it would miss the prefix the current
+            # prompt is about to donate to the trie (a burst of
+            # same-system-prompt requests shares only if admission
+            # waits for the first one's registration)
+            return False
         slot = self._free_slot_id()
         if slot is None:
             return False
         req = self.waiting[0]
-        if not self.cache.can_admit(len(req.prompt) + len(req.generated)):
-            return False
+        shared = self.cache.alloc_slot(
+            slot, len(req.prompt), prompt=req.prompt,
+            reserve_tokens=len(req.generated))
+        if shared is None:
+            # make room from the prefix cache before giving up: release
+            # up to the request's worst-case bill at once (a page per
+            # node dribble would stall admission for many steps)
+            need = self.cache.pages_for(
+                len(req.prompt) + len(req.generated)) + 2
+            if not self.cache.release_prefix_pages(need):
+                return False
+            shared = self.cache.alloc_slot(
+                slot, len(req.prompt), prompt=req.prompt,
+                reserve_tokens=len(req.generated))
+            if shared is None:
+                return False
         self.waiting.popleft()
-        if not self.cache.alloc_slot(slot, len(req.prompt)):
-            raise RuntimeError("allocation failed after can_admit")
-        # prefill interleaves with in-flight decode at step granularity
-        last, kv = self._prefill(self.params,
-                                 {"tokens": req.prompt[None]})
-        self.cache.write_prefill(slot, kv["layers"]["kv"])
-        self.n_prefills += 1
+        req.prefill_pos = shared
+        req.shared_tokens = shared
+        self.prefilling[slot] = req
+        self._admit_seq[slot] = self._admit_counter
+        self._admit_counter += 1
+        return True
+
+    def _bucket_pages(self, n_needed: int) -> int:
+        for e in self.bucket_edges:
+            if e >= n_needed:
+                return e
+        return self.bucket_edges[-1]
+
+    def _run_chunk(self, slot: int, req: Request, now: float) -> None:
+        """Ingest one prompt chunk for the head PREFILLING request; on
+        the chunk that completes the prompt, promote it to DECODING."""
+        start = req.prefill_pos
+        S = len(req.prompt)
+        valid = min(self.chunk_size, S - start)
+        nb = self._bucket_pages(self.cache.pages_for(start + valid))
+        tokens = np.zeros((1, self.chunk_size), np.int32)
+        tokens[0, :valid] = req.prompt[start:start + valid]
+        table_row = jax.numpy.asarray(
+            self.cache.page_tables[slot, :nb])
+        state = {"k_pages": self.cache.k_pages,
+                 "v_pages": self.cache.v_pages}
+        tok, state = self._chunk(self.params, state,
+                                 jax.numpy.asarray(tokens), table_row,
+                                 jax.numpy.asarray(start, np.int32),
+                                 jax.numpy.asarray(valid, np.int32))
+        self.cache.k_pages = state["k_pages"]
+        self.cache.v_pages = state["v_pages"]
+        req.prefill_pos += valid
+        self.cache.lengths[slot] = req.prefill_pos
+        self.n_prefill_chunks += 1
+        if req.prefill_pos < S:
+            return
+        # prompt fully resident: donate it to the prefix trie, then
+        # promote (replaying any pre-preemption generation)
+        self.prefilling.pop(slot)
+        self.cache.register_prefix(slot, req.prompt)
+        self.active[slot] = req
         if req.generated:
             # recompute-readmission after preemption: replay the
             # already-generated tokens through the *same* decode
             # program, reproducing the original token stream exactly
             # (re-prefilling prompt+generated instead would cross the
-            # chunked-prefill/step-decode numerics boundary and can
-            # flip near-tie argmaxes)
-            self._replay(slot, req.generated[:-1])
+            # prompt/generation numerics boundary of the oracle)
+            self._replay(slot, req.generated[:-1], now)
         else:
-            tok = int(np.argmax(np.asarray(last[0])))
-            req.generated.append(tok)
+            req.generated.append(int(np.asarray(tok)[0, 0]))
         if req.ttft is None:
             req.ttft = now - req.arrival
-        self.active[slot] = req
-        self._admit_seq[slot] = self._admit_counter
-        self._admit_counter += 1
         if self._done(req):
             self._finish(slot, now)
-        return True
 
-    def _replay(self, slot: int, tokens) -> None:
+    def _replay(self, slot: int, tokens, now: float) -> None:
         """Write ``tokens`` into ``slot``'s pages via single-slot decode
-        steps (all other rows masked to the null page)."""
+        steps (all other rows masked to the null page).  The admission
+        reserve is not pinned across the chunked-prefill window (other
+        slots' decode growth can consume it), so replay makes room the
+        same way the decode loop does — never by evicting itself."""
         for t in tokens:
-            if not self.cache.ensure_headroom(slot):
-                raise RuntimeError(
-                    "replay allocation failed despite admission reserve")
+            while not self.cache.ensure_headroom(slot):
+                if not self._make_room(now, exclude=slot):
+                    raise RuntimeError(
+                        "single request exceeds total page budget")
             toks = np.zeros((self.max_batch, 1), np.int32)
             toks[slot, 0] = t
             tables = np.zeros_like(self.cache.page_tables)
@@ -187,35 +295,66 @@ class ServeEngine:
                 or (self.eos_id is not None
                     and req.generated[-1] == self.eos_id))
 
+    def _make_room(self, now: float,
+                   exclude: Optional[int] = None) -> bool:
+        """Free one page's worth of space: prefer dropping cached
+        prefixes over evicting live requests."""
+        if self.cache.release_prefix_pages(1):
+            return True
+        return self._preempt_youngest(now, exclude=exclude) is not None
+
     # ------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:
-        """One engine iteration: admit what fits, then one batched
-        decode step over every active slot.  Returns True while any
-        work remains (queued or in flight)."""
-        while self._admit_one(now):
-            pass
+        """One engine iteration: admit what fits, ingest one prompt
+        chunk for the head prefilling request, then one batched decode
+        step over every decoding slot.  Returns True while any work
+        remains (queued or in flight)."""
+        # Admission + prefill.  Chunk pacing exists to stop a LONG
+        # prompt from stalling in-flight decode, so only a mid-prompt
+        # chunk yields the step: short prompts (<= chunk_size) admit,
+        # ingest, and promote eagerly — the batch ramps as fast as
+        # one-shot prefill — and each registers its prefix before the
+        # next admission, so same-step bursts still share.  With no
+        # decoders to protect, long prompts ingest back-to-back too.
+        while True:
+            if not self.prefilling and not self._admit_one(now):
+                break
+            slot, req = next(iter(self.prefilling.items()))
+            self._run_chunk(slot, req, now)
+            if slot in self.prefilling and self.active:
+                break                          # mid-prompt pacing point
         if not self.active:
-            return bool(self.waiting)
+            return bool(self.waiting or self.prefilling)
 
-        # page headroom for this step's token writes; evict on pressure
+        # page headroom for this step's token writes (growth or COW of
+        # a trie-donated page); evict on pressure
         for slot in sorted(self.active):
             while slot in self.active and \
                     not self.cache.ensure_headroom(slot):
-                victim = self._preempt_youngest(now)
-                if victim is None or not self.active:
+                if not self._make_room(now):
                     raise RuntimeError(
                         "single request exceeds total page budget")
 
         if not self.active:          # pressure evicted everyone
-            return bool(self.waiting)
+            return bool(self.waiting or self.prefilling)
 
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for slot, req in self.active.items():
             tokens[slot, 0] = req.generated[-1]
-        tables, lengths = self.cache.device_tables()
+        # mask PREFILLING slots out of the decode program: their rows
+        # carry the null page table so the lockstep write lands on
+        # page 0, not on a page mid-ingest
+        active_rows = np.zeros((self.max_batch,), bool)
+        for slot in self.active:
+            active_rows[slot] = True
+        tables = np.where(active_rows[:, None], self.cache.page_tables,
+                          0).astype(np.int32)
+        lengths = np.where(active_rows, self.cache.lengths,
+                           0).astype(np.int32)
         state = {"k_pages": self.cache.k_pages,
                  "v_pages": self.cache.v_pages,
-                 "page_tables": tables, "lengths": lengths}
+                 "page_tables": jax.numpy.asarray(tables),
+                 "lengths": jax.numpy.asarray(lengths)}
         nxt, state = self._decode(self.params, state,
                                   jax.numpy.asarray(tokens))
         self.cache.k_pages = state["k_pages"]
@@ -228,7 +367,7 @@ class ServeEngine:
             self.cache.lengths[slot] += 1
             if self._done(req):
                 self._finish(slot, now)
-        return bool(self.active or self.waiting)
+        return bool(self.active or self.prefilling or self.waiting)
 
     # -------------------------------------------------------------- run
     def run(self, requests: List[Request], *,
@@ -246,7 +385,8 @@ class ServeEngine:
             now = (time.perf_counter() - t0) if realtime else float("inf")
             if not self.step(now=now):
                 break
-            if realtime and not self.active and self.waiting:
+            if realtime and not self.active and not self.prefilling \
+                    and self.waiting:
                 time.sleep(max(0.0,
                                self.waiting[0].arrival
                                - (time.perf_counter() - t0)))

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["make_prefill_step", "make_decode_step",
-           "make_paged_decode_step", "greedy_generate"]
+           "make_paged_decode_step", "make_chunk_prefill_step",
+           "greedy_generate"]
 
 
 def make_prefill_step(model, max_len=None) -> Callable:
@@ -47,6 +48,23 @@ def make_paged_decode_step(model, sample: str = "greedy") -> Callable:
             raise ValueError(sample)
         return nxt[:, None], state
     return paged_step
+
+
+def make_chunk_prefill_step(model, sample: str = "greedy") -> Callable:
+    """Chunked-prefill step: ingest up to C prompt tokens of one
+    request into the paged cache and return (greedy next token (1, 1),
+    new page state).  The token is only meaningful on the chunk that
+    completes the prompt (it is the request's first generated token);
+    earlier chunks' logits are discarded by the engine."""
+    def chunk_step(params, state, tokens, table_row, start, n_valid):
+        logits, state = model.prefill_chunk_paged(
+            params, state, tokens, table_row, start, n_valid)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], state
+    return chunk_step
 
 
 def greedy_generate(model, params, prompt_batch, n_steps: int,

@@ -83,16 +83,16 @@ def test_allocator_alloc_free_reuse(qwen3):
     _, model, _ = qwen3
     c = make_cache(model)
     assert c.free_pages == 11            # page 0 reserved
-    assert c.alloc_slot(0, 17)           # 3 pages
+    assert c.alloc_slot(0, 17) is not None       # 3 pages
     assert c.free_pages == 8
-    assert c.alloc_slot(1, 8)            # 1 page
+    assert c.alloc_slot(1, 8) is not None        # 1 page
     c.check_invariants()
     pages0 = set(c.used_pages(0))
     c.free_slot(0)
     assert c.free_pages == 10
     c.check_invariants()
     # freed pages come back around
-    assert c.alloc_slot(2, 40)           # 5 pages
+    assert c.alloc_slot(2, 40) is not None       # 5 pages
     assert set(c.used_pages(2)) & pages0
     c.check_invariants()
 
@@ -100,7 +100,9 @@ def test_allocator_alloc_free_reuse(qwen3):
 def test_allocator_headroom_growth_and_exhaustion(qwen3):
     _, model, _ = qwen3
     c = make_cache(model, n_pages=4)     # 3 usable
-    assert c.alloc_slot(0, 8)            # exactly 1 full page
+    # 1 full page + the decode-headroom reserve fits in 3
+    assert c.alloc_slot(0, 8) is not None
+    c.lengths[0] = 8
     assert c.ensure_headroom(0)          # token 8 -> needs page 2
     assert len(c.used_pages(0)) == 2
     c.lengths[0] = 16
@@ -113,10 +115,13 @@ def test_allocator_headroom_growth_and_exhaustion(qwen3):
 def test_allocator_rejects_oversubscription(qwen3):
     _, model, _ = qwen3
     c = make_cache(model)
-    assert not c.alloc_slot(0, 8 * 10)   # > max_pages_per_seq
-    assert not c.can_admit(8 * 12)
+    assert c.alloc_slot(0, 8 * 10) is None   # > max_pages_per_seq
     assert c.free_pages == 11
+    tight = make_cache(model, n_pages=5)     # 4 usable
+    assert tight.alloc_slot(0, 8 * 4) is None   # no headroom page left
+    assert tight.free_pages == 4
     c.check_invariants()
+    tight.check_invariants()
 
 
 @given(sizes=st.lists(st.integers(1, 40), min_size=1, max_size=8))
@@ -126,7 +131,7 @@ def test_allocator_invariants_random_churn(qwen3, sizes):
     c = make_cache(model, max_batch=8, n_pages=16, max_pages_per_seq=8)
     live = []
     for i, s in enumerate(sizes):
-        if c.alloc_slot(i, s):
+        if c.alloc_slot(i, s) is not None:
             live.append(i)
         c.check_invariants()
         if len(live) > 2:                # churn: free the oldest
@@ -162,32 +167,152 @@ def test_engine_token_exact_vs_greedy_generate(qwen3):
             np.asarray(r.generated, np.int32), oracle[r.rid],
             err_msg=f"request {r.rid} diverged")
     eng.cache.check_invariants()
+    # prompt KV outlives its request in the prefix trie; draining the
+    # trie must return every page to the free list
+    eng.cache.release_prefix_pages(len(eng.cache.prefix))
+    eng.cache.check_invariants()
     assert eng.cache.free_pages == 23    # everything returned
     assert eng.n_decode_steps < sum(lens) // min(lens) * gen
 
 
 def test_engine_preemption_recovers_token_exact(qwen3):
     """Page pressure forces a mid-flight eviction; the preempted request
-    is recomputed on readmission and still matches the oracle."""
+    is recomputed on readmission and still matches the oracle.
+
+    gen is kept short: the random-init smoke model degenerates into
+    long repeated-token plateaus where bf16 hidden states sit on
+    rounding knife-edges, and XLA CPU's reduction partitioning can
+    shift under machine load — docs/serving.md (parity section)
+    documents the caveat.  Sharing is off so page pressure is
+    predictable (4+4+3 prompt pages + decode growth against 12);
+    prefix sharing gets its own tests below."""
     cfg, model, params = qwen3
     rng = np.random.default_rng(11)
-    lens, gen = [30, 28, 26, 25], 14
+    lens, gen = [30, 28, 18], 8
     prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
                for L in lens]
     oracle = {
         i: np.asarray(greedy_generate(model, params, {"tokens": p[None]},
                                       gen, cache_len=len(p) + gen))[0]
         for i, p in enumerate(prompts)}
-    eng = ServeEngine(model, params, max_batch=3, n_pages=14,
-                      page_size=8, max_pages_per_seq=8)
+    eng = ServeEngine(model, params, max_batch=3, n_pages=13,
+                      page_size=8, max_pages_per_seq=8,
+                      prefix_sharing=False)
     done = eng.run([Request(rid=i, prompt=p, max_new_tokens=gen)
                     for i, p in enumerate(prompts)])
     assert sum(r.n_preemptions for r in done) >= 1, \
         "page budget was meant to force a preemption"
+    assert eng.n_replay_steps >= 1, \
+        "readmission should replay pre-preemption tokens"
     for r in done:
         np.testing.assert_array_equal(
             np.asarray(r.generated, np.int32), oracle[r.rid])
     eng.cache.check_invariants()
+
+
+def test_chunked_prefill_long_prompt_parity(qwen3):
+    """A prompt spanning several chunks and context buckets ingests
+    incrementally and still reproduces the oracle exactly."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, size=(70,)).astype(np.int32)
+    gen = 6
+    oracle = np.asarray(greedy_generate(
+        model, params, {"tokens": prompt[None]}, gen,
+        cache_len=len(prompt) + gen))[0]
+    eng = ServeEngine(model, params, max_batch=2, n_pages=16,
+                      page_size=8, max_pages_per_seq=12, chunk_size=16,
+                      bucket_edges=[2, 4, 8, 12])
+    done = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=gen)])
+    assert eng.n_prefill_chunks == 5          # ceil(70 / 16)
+    np.testing.assert_array_equal(
+        np.asarray(done[0].generated, np.int32), oracle)
+    eng.cache.check_invariants()
+
+
+# ----------------------------------------------------- prefix sharing
+def test_prefix_sharing_cow_token_exact(qwen3):
+    """Requests sharing a prompt prefix diverge mid-page: later
+    requests attach the cached pages (copy-on-write protects the
+    partial one) and every stream still matches its unshared oracle."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, size=(20,)).astype(np.int32)
+    gen = 6
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size,
+                                            size=(7,)).astype(np.int32)])
+               for _ in range(3)]
+    oracle = {
+        i: np.asarray(greedy_generate(model, params, {"tokens": p[None]},
+                                      gen, cache_len=len(p) + gen))[0]
+        for i, p in enumerate(prompts)}
+    eng = ServeEngine(model, params, max_batch=2, n_pages=32,
+                      page_size=8, max_pages_per_seq=8, chunk_size=16)
+    done = eng.run([Request(rid=i, prompt=p, max_new_tokens=gen)
+                    for i, p in enumerate(prompts)])
+    # requests 1 and 2 reuse the 20-token prefix: 2 full pages plus a
+    # copy-on-write fork of the partial third page
+    assert eng.cache.n_shared_tokens >= 2 * 20
+    assert eng.cache.n_cow >= 2
+    for r in done:
+        np.testing.assert_array_equal(
+            np.asarray(r.generated, np.int32), oracle[r.rid],
+            err_msg=f"request {r.rid} diverged")
+    eng.cache.check_invariants()
+
+
+def test_shared_page_refcounts_and_eviction(qwen3):
+    """A shared page must survive its donor: freeing one reader (or the
+    trie reference) never frees a page while refcount > 1."""
+    _, model, _ = qwen3
+    c = make_cache(model)                     # 11 usable pages
+    prompt = np.arange(20, dtype=np.int32)    # 2 full pages + 4 tokens
+    assert c.alloc_slot(0, 20, prompt=prompt) == 0
+    c.lengths[0] = 20                         # simulate full ingest
+    c.register_prefix(0, prompt)
+    c.check_invariants()
+    free_before = c.free_pages
+    # second reader: shares 2 full pages + a COW fork of the partial
+    # (capped one short of the full prompt)
+    shared = c.alloc_slot(1, 20, prompt=prompt)
+    assert shared == 19
+    assert c.n_cow == 1
+    assert c.free_pages == free_before - 1    # only the COW copy
+    assert c.used_pages(1)[:2] == c.used_pages(0)[:2]
+    assert c.used_pages(1)[2] != c.used_pages(0)[2]
+    c.check_invariants()
+    # donor eviction: its pages stay resident (trie + reader refs)
+    c.free_slot(0)
+    assert c.free_pages == free_before - 1
+    c.check_invariants()
+    # trie eviction frees only the now-unreferenced partial page
+    assert c.release_prefix_pages(len(c.prefix)) == 3
+    assert c.free_pages == free_before
+    c.check_invariants()
+    # last reader out: everything returns
+    c.free_slot(1)
+    assert c.free_pages == 11
+    c.check_invariants()
+
+
+def test_prefix_cache_lookup_partial_and_exact(qwen3):
+    """PrefixCache trie semantics: exact full-page descent, partial
+    longest-common-prefix hits, and the always-compute-one-token cap."""
+    from repro.serve.prefix import PrefixCache
+    t = PrefixCache(4)
+    t.insert(np.arange(10), [11, 12, 13])     # 2 full pages + tail (8,9)
+    # identical prompt: capped one short of full coverage
+    pages, shared = t.lookup(np.arange(10))
+    assert shared == 9 and [p for p, _ in pages] == [11, 12, 13]
+    # divergence mid-page-2: only the exact full page + partial match
+    q = np.array([0, 1, 2, 3, 4, 5, 6, 99, 8, 9])
+    pages, shared = t.lookup(q)
+    assert shared == 7 and [p for p, _ in pages] == [11, 12]
+    assert pages[-1] == (12, 3)
+    # no hit at all
+    pages, shared = t.lookup(np.array([7, 7, 7, 7]))
+    assert shared == 0 and pages == []
 
 
 def test_engine_rejects_unsupported_family():
