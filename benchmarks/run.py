@@ -17,7 +17,8 @@ import time
 
 from . import (fig11_util, fig13_traffic, fig15_energy, fig19_sparse,
                fig22_simd, fig23_scaling, kernel_dataflow, roofline,
-               serve_prefix, serve_throughput, table5_cisc, table6_static)
+               serve_prefix, serve_spec, serve_throughput, table5_cisc,
+               table6_static)
 
 BENCHES = {
     "table5": table5_cisc.run,
@@ -32,6 +33,7 @@ BENCHES = {
     "roofline": roofline.run,
     "serve": serve_throughput.run,
     "serve_prefix": serve_prefix.run,
+    "serve_spec": serve_spec.run,
 }
 
 

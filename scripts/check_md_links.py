@@ -1,10 +1,13 @@
 #!/usr/bin/env python
-"""Check that intra-repo markdown links resolve to real files.
+"""Check that intra-repo markdown links resolve — files AND anchors.
 
 Scans every tracked *.md for inline links and fails with a listing of
-dangling ones.  External links (scheme://, mailto:) and pure anchors
-are skipped; a `path#fragment` link only checks the path.  Run from
-anywhere:
+dangling ones.  A `path#fragment` link checks both that the path
+exists and, for markdown targets, that the fragment names a rendered
+heading (GitHub slug rules: lowercase, punctuation stripped, spaces to
+dashes, duplicate slugs suffixed -1, -2, ...).  Pure `#fragment`
+links validate against the containing file's own headings.  External
+links (scheme://, mailto:) are skipped.  Run from anywhere:
 
     python scripts/check_md_links.py
 """
@@ -15,33 +18,68 @@ import sys
 from pathlib import Path
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.M)
+FENCE = re.compile(r"^(```|~~~).*?^\1[^\n]*$", re.M | re.S)
 ROOT = Path(__file__).resolve().parent.parent
+
+
+def slugify(text: str) -> str:
+    """GitHub's heading-to-anchor rule: strip inline markup, lowercase,
+    drop everything but word chars / spaces / hyphens, spaces become
+    hyphens (NOT collapsed — `a — b` renders as `a--b`)."""
+    text = re.sub(r"`([^`]*)`", r"\1", text)                 # inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)     # links
+    text = re.sub(r"[*_]{1,2}([^*_]+)[*_]{1,2}", r"\1", text)  # emphasis
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md: Path, cache: dict) -> set:
+    if md not in cache:
+        # fenced code blocks can hold `# comment` lines — not headings
+        body = FENCE.sub("", md.read_text(encoding="utf-8"))
+        seen: dict = {}
+        out = set()
+        for m in HEADING.finditer(body):
+            slug = slugify(m.group(1))
+            n = seen.get(slug, 0)
+            seen[slug] = n + 1
+            out.add(slug if n == 0 else f"{slug}-{n}")
+        cache[md] = out
+    return cache[md]
 
 
 def check(root: Path) -> int:
     bad = []
     md_files = [p for p in root.rglob("*.md")
                 if ".git" not in p.parts and "results" not in p.parts]
-    n_links = 0
+    anchor_cache: dict = {}
+    n_links = n_anchors = 0
     for md in md_files:
         for m in LINK.finditer(md.read_text(encoding="utf-8")):
             target = m.group(1)
-            if "://" in target or target.startswith(("mailto:", "#")):
+            if "://" in target or target.startswith("mailto:"):
                 continue
-            path = target.split("#", 1)[0]
-            if not path:
-                continue
-            n_links += 1
-            resolved = (md.parent / path).resolve()
-            if not resolved.exists():
-                bad.append(f"{md.relative_to(root)}: ({target})")
+            path, _, frag = target.partition("#")
+            resolved = (md.parent / path).resolve() if path else md
+            if path:
+                n_links += 1
+                if not resolved.exists():
+                    bad.append(f"{md.relative_to(root)}: ({target})")
+                    continue
+            if frag and resolved.suffix == ".md":
+                n_anchors += 1
+                if frag not in anchors_of(resolved, anchor_cache):
+                    bad.append(f"{md.relative_to(root)}: ({target}) — "
+                               f"no heading renders as #{frag}")
     if bad:
         print(f"{len(bad)} dangling markdown link(s):")
         for b in bad:
             print(f"  {b}")
         return 1
-    print(f"{len(md_files)} markdown files, {n_links} intra-repo links, "
-          "all resolve")
+    print(f"{len(md_files)} markdown files, {n_links} intra-repo links "
+          f"+ {n_anchors} anchor fragments, all resolve")
     return 0
 
 

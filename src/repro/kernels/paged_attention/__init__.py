@@ -1,3 +1,5 @@
 from .kernel import paged_attention_kernel  # noqa: F401
 from .ops import paged_attention  # noqa: F401
-from .ref import gather_pages, paged_attention_ref  # noqa: F401
+from .ref import (  # noqa: F401
+    gather_pages, paged_attention_ref, paged_verify_attention_ref,
+)

@@ -38,3 +38,38 @@ def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths):
     out = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+def paged_verify_attention_ref(q, k_pages, v_pages, page_tables, lengths):
+    """Multi-token verification attention over paged KV (speculative
+    decode).  Op-for-op ``paged_attention_ref`` with a query-time axis:
+    query t of sequence b sits at absolute position ``lengths[b] + t``
+    and attends to gathered positions j < lengths[b] + t + 1 — i.e.
+    everything already resident plus the speculated tokens written at or
+    before its own position.  Per (b, t) the score vector, the softmax
+    reductions, and the value contraction run over the same gathered
+    buffer length as the single-token path, so the t-th verify query is
+    bit-identical to the decode step the target model would have run at
+    that position (the engine's token-exactness rests on this — see
+    docs/speculative.md).
+
+    q: (B, T, H, Dh); k/v_pages: (P, ps, KVH, Dh); page_tables: (B, n)
+    int32; lengths: (B,) tokens resident *before* this verify call's T
+    writes.  Returns (B, T, H, Dh)."""
+    B, T, H, Dh = q.shape
+    KVH = k_pages.shape[2]
+    G = H // KVH
+    k = gather_pages(k_pages, page_tables)       # (B, S, KVH, Dh)
+    v = gather_pages(v_pages, page_tables)
+    qh = q.reshape(B, T, KVH, G, Dh)
+    s = jnp.einsum("btkgd,bjkd->btkgj", qh, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / math.sqrt(Dh))
+    idx = jnp.arange(k.shape[1])
+    q_pos = lengths[:, None] + jnp.arange(T)[None, :]        # (B, T)
+    valid = idx[None, None, :] < (q_pos + 1)[:, :, None]     # (B, T, S)
+    s = jnp.where(valid[:, :, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkgj,bjkd->btkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, H, Dh).astype(q.dtype)

@@ -52,7 +52,7 @@ def synth_requests(cfg, n: int, prompt_len: int, gen: int,
 
 def run_engine(model, params, reqs, *, batch, page_size, n_pages,
                realtime, chunk_size=32, prefix_sharing=True,
-               bucket_edges=None):
+               bucket_edges=None, spec_k=0, drafter=None):
     eng = ServeEngine(model, params, max_batch=batch, n_pages=n_pages,
                       page_size=page_size,
                       max_pages_per_seq=max(
@@ -60,7 +60,8 @@ def run_engine(model, params, reqs, *, batch, page_size, n_pages,
                                        page_size) for r in reqs),
                       chunk_size=chunk_size,
                       prefix_sharing=prefix_sharing,
-                      bucket_edges=bucket_edges)
+                      bucket_edges=bucket_edges,
+                      spec_k=spec_k, drafter=drafter)
     t0 = time.perf_counter()
     done = eng.run(reqs, realtime=realtime)
     dt = time.perf_counter() - t0
@@ -73,7 +74,11 @@ def run_engine(model, params, reqs, *, batch, page_size, n_pages,
             "decode_steps": eng.n_decode_steps,
             "prefill_chunks": eng.n_prefill_chunks,
             "shared_tokens": eng.cache.n_shared_tokens,
-            "cow_copies": eng.cache.n_cow}
+            "cow_copies": eng.cache.n_cow,
+            "spec_rounds": eng.n_spec_rounds,
+            "drafted": eng.n_drafted,
+            "draft_accepted": eng.n_draft_accepted,
+            "accept_rate": eng.n_draft_accepted / max(eng.n_drafted, 1)}
 
 
 def run_naive(model, params, cfg, args):
@@ -128,6 +133,17 @@ def main():
     ap.add_argument("--bucket-edges", type=str, default="",
                     help="comma-separated context buckets in pages "
                          "(default: doubling)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens verified per engine step "
+                         "(speculative decode; tokens are unchanged, "
+                         "only faster)")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="disable speculative decode (one token per "
+                         "decode step)")
+    ap.add_argument("--draft-config", type=str, default="",
+                    help="arch id of a draft model for speculation "
+                         "(default: model-free n-gram prompt lookup); "
+                         "resolved at the same --smoke size as --arch")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke if args.smoke else configs.get)(args.arch)
@@ -147,17 +163,32 @@ def main():
                                               args.page_size))
     edges = ([int(e) for e in args.bucket_edges.split(",")]
              if args.bucket_edges else None)
+    spec_k = 0 if args.no_spec else args.spec_k
+    drafter = None
+    if spec_k and args.draft_config:
+        from repro.serve import DraftModelDrafter
+        dcfg = (configs.get_smoke if args.smoke
+                else configs.get)(args.draft_config)
+        dmodel = build_model(dcfg)
+        drafter = DraftModelDrafter(
+            dmodel, dmodel.init(jax.random.PRNGKey(1)), cfg_target=cfg)
     stats = run_engine(model, params, reqs, batch=args.batch,
                        page_size=args.page_size, n_pages=n_pages,
                        realtime=True, chunk_size=args.chunk_size,
                        prefix_sharing=not args.no_prefix_sharing,
-                       bucket_edges=edges)
+                       bucket_edges=edges, spec_k=spec_k,
+                       drafter=drafter)
+    spec_note = (f"{stats['spec_rounds']} verify rounds, "
+                 f"accept rate {stats['accept_rate']:.2f} "
+                 f"({stats['draft_accepted']}/{stats['drafted']} drafts), "
+                 if spec_k else "")
     print(f"{args.requests} requests ({args.shared_prefix}+"
           f"{args.prompt_len}+{args.gen} tok) "
           f"batch={args.batch} pages={n_pages}x{args.page_size}: "
           f"{stats['tok_per_s']:.1f} tok/s, "
           f"TTFT {stats['ttft_mean_s'] * 1e3:.0f} ms, "
           f"{stats['decode_steps']} decode steps, "
+          f"{spec_note}"
           f"{stats['prefill_chunks']} prefill chunks, "
           f"{stats['shared_tokens']} prefix tokens reused, "
           f"{stats['cow_copies']} COW copies")

@@ -498,6 +498,50 @@ def paged_attention_block(p, x, cfg, *, positions, k_pages, v_pages,
     return out, k_pages, v_pages
 
 
+def paged_verify_attention_block(p, x, cfg, *, positions, k_pages,
+                                 v_pages, page_table, lengths):
+    """Speculative-verification attention sub-layer (paged decode with a
+    query-time axis).
+
+    x: (B, T, D) — token 0 of row b is the request's last confirmed
+    token, tokens 1..T-1 its draft continuation, token t sitting at
+    absolute position ``lengths[b] + t`` (per-request positions, like
+    ``paged_attention_block``).  All T tokens' K/V are written into
+    their page slots first — the caller guarantees every written page
+    is private (copy-on-write / headroom happen host-side *before* the
+    program runs; see serve/kv_cache.ensure_headroom) or is the null
+    page for positions the row will never confirm — then attention runs
+    over the gathered pages with per-(row, t) causal masking, so query
+    t sees exactly the context the single-token decode step at its
+    position would have seen.  Verifying T = 1 tokens *is* the decode
+    step, bit for bit.
+
+    Returns (out, k_pages, v_pages).
+    """
+    from ..kernels.paged_attention.ref import paged_verify_attention_ref
+    B, T, D = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    ps = k_pages.shape[1]
+    nb = page_table.shape[1]
+    abs_pos = lengths[:, None] + jnp.arange(T)[None, :]         # (B, T)
+    bidx = jnp.arange(B)[:, None]
+    # a padding position past the end of the page table must land on
+    # the null page — the default clamping gather would alias it onto
+    # the row's *last* live page and corrupt confirmed history
+    idx = abs_pos // ps
+    pidx = jnp.where(idx < nb,
+                     page_table[bidx, jnp.minimum(idx, nb - 1)],
+                     0)                                         # (B, T)
+    slot = abs_pos % ps
+    k_pages = k_pages.at[pidx, slot].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[pidx, slot].set(v.astype(v_pages.dtype))
+    out = paged_verify_attention_ref(q, k_pages, v_pages, page_table,
+                                     lengths)
+    out = out.reshape(B, T, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"].astype(out.dtype)
+    return out, k_pages, v_pages
+
+
 def paged_chunk_attention_block(p, x, cfg, *, positions, start, n_valid,
                                 k_pages, v_pages, table_row):
     """Chunked-prefill attention sub-layer over a paged KV cache.

@@ -512,3 +512,60 @@ class DecoderLM:
         return logits[:, 0], {"k_pages": k_pages, "v_pages": v_pages,
                               "page_tables": tables,
                               "lengths": lengths + 1}
+
+    def verify_step_paged(self, params, state, tokens):
+        """Score T tokens per request in one batched pass against the
+        paged KV cache (speculative-decode verification).
+
+        ``tokens``: (B, T) — row b's token 0 is its last confirmed
+        token, tokens 1..T-1 a draft continuation; token t sits at the
+        per-request absolute position ``lengths[b] + t``.  All T
+        tokens' K/V are persisted into pages and each query attends
+        causally up to its own position, so ``logits[:, t]`` is
+        bit-identical to what ``decode_step_paged`` would return after
+        sequentially consuming tokens 0..t (same per-token projections,
+        same gathered-buffer softmax shape — docs/speculative.md spells
+        out the argument).  T = 1 degenerates to exactly one decode
+        step.
+
+        Returns (logits (B, T, V), new state).  ``lengths`` is returned
+        *unadvanced*: how many of the T positions become real history
+        depends on host-side acceptance, and the caller (serve
+        scheduler) owns the authoritative lengths — rejected positions
+        hold stale page writes that masking hides, like any slot past
+        ``lengths``.
+        """
+        assert self.supports_paged_decode()
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        lengths = state["lengths"]
+        tables = state["page_tables"]
+        B, T = tokens.shape
+        positions = (lengths[:, None]
+                     + jnp.arange(T, dtype=jnp.int32)[None, :])
+        x = self._embed_inputs(
+            params, {"tokens": tokens, "positions": positions}, dtype)
+        use_moe = cfg.moe is not None
+
+        def body(x, inp):
+            lp, kp, vp = inp
+            h = C.apply_norm(lp["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+            mix, kp, vp = C.paged_verify_attention_block(
+                lp["mix"], h, cfg, positions=positions, k_pages=kp,
+                v_pages=vp, page_table=tables, lengths=lengths)
+            x = x + mix
+            h2 = C.apply_norm(lp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+            if use_moe:
+                f, _ = C.moe_block(lp["ffn"], h2, cfg)
+            else:
+                f = C.mlp_block(lp["ffn"], h2, cfg)
+            return x + f, (kp, vp)
+
+        x, (k_pages, v_pages) = lax.scan(
+            body, x, (params["layers"], state["k_pages"],
+                      state["v_pages"]))
+        x = C.apply_norm(params["final_norm"], x, cfg.norm_kind,
+                         cfg.norm_eps)
+        logits = C.unembed(params["embed"], x, cfg)
+        return logits, {"k_pages": k_pages, "v_pages": v_pages,
+                        "page_tables": tables, "lengths": lengths}

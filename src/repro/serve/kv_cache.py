@@ -34,6 +34,13 @@ tests/test_serve_engine.py):
   computes in bf16, so K/V read back from pages is bit-identical to the
   in-flight K/V of whole-prompt prefill; the engine's token-parity
   guarantee (docs/serving.md) depends on this.
+* **Speculative writes stay behind the same discipline** — a verify
+  step writes K/V for a whole draft window before acceptance is known,
+  so ``ensure_headroom(n_tokens=k+1)`` privatizes/allocates every page
+  in the window *first*, and ``rollback_spec`` returns pages past the
+  confirmed frontier afterwards; rejected positions inside kept pages
+  are plain stale-past-``lengths`` data that masking already hides
+  (docs/speculative.md walks the rollback invariants).
 
 The manager is host-side Python (allocation is control flow, not math);
 the page arrays live on device and are updated functionally by the
@@ -205,19 +212,59 @@ class PagedKVCache:
         self.n_cow += 1
         return True
 
-    def ensure_headroom(self, slot: int) -> bool:
-        """Make sure the next token write (at index ``lengths[slot]``)
-        has a *private* page: grows the table by one page at page
-        boundaries, and copies a shared write target (copy-on-write —
-        the page a finished request donated to the prefix trie must not
-        be mutated by its own donor's decode).  Returns False if the
-        allocator is exhausted (caller preempts or evicts)."""
-        need = int(self.lengths[slot]) // self.page_size
+    def ensure_headroom(self, slot: int, n_tokens: int = 1) -> bool:
+        """Make sure the next ``n_tokens`` token writes (positions
+        ``lengths[slot] .. lengths[slot] + n_tokens - 1``) each have a
+        *private* page: grows the table at page boundaries, and copies
+        a shared write target (copy-on-write — the page a finished
+        request donated to the prefix trie must not be mutated by its
+        own donor's decode).  ``n_tokens`` > 1 is the speculative-
+        decode shape: a verify step writes K/V for the whole draft
+        window before acceptance is known.
+
+        Returns False if the allocator is exhausted (caller preempts or
+        evicts).  Partial progress is kept — the call is idempotent, so
+        the caller's make-room-and-retry loop converges without redoing
+        COW copies: already-private pages and already-grown table
+        entries satisfy their range check immediately on retry."""
+        assert n_tokens >= 1
+        start = int(self.lengths[slot])
         tbl = self._tables[slot]
-        if need < len(tbl):
-            return self._cow_page(slot, need)
-        assert need == len(tbl), (need, len(tbl))
-        return self._alloc_page(slot) is not None
+        first = start // self.page_size
+        last = (start + n_tokens - 1) // self.page_size
+        for idx in range(first, last + 1):
+            if idx < len(tbl):
+                if not self._cow_page(slot, idx):
+                    return False
+            else:
+                assert idx == len(tbl), (idx, len(tbl))
+                if self._alloc_page(slot) is None:
+                    return False
+        return True
+
+    def rollback_spec(self, slot: int) -> int:
+        """Release speculative page growth past the write frontier
+        (called after a verify step whose trailing draft tokens were
+        rejected).  Keeps every page holding confirmed tokens *plus*
+        the page the next write lands on; trailing pages — allocated by
+        ``ensure_headroom(n_tokens > 1)`` for positions the request did
+        not confirm — drop their slot reference and return to the free
+        list (they were made private before the write, so refcount hits
+        zero here unless another reader raced a share in, which the COW
+        discipline forbids for write targets).  Rejected positions
+        *inside* kept pages need no work at all: they sit past
+        ``lengths[slot]``, where every attention mask already hides
+        them, and the next confirmed write overwrites them in place.
+        Returns the number of pages released."""
+        tbl = self._tables[slot]
+        keep = int(self.lengths[slot]) // self.page_size + 1
+        freed = 0
+        while len(tbl) > keep:
+            pid = tbl.pop()
+            self.page_tables[slot, len(tbl)] = NULL_PAGE
+            self._release(pid)
+            freed += 1
+        return freed
 
     def free_slot(self, slot: int) -> None:
         """Drop every page reference of ``slot`` (eviction or

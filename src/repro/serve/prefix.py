@@ -17,6 +17,29 @@ pressure the cache evicts trie leaves in LRU order
 (``pop_lru_leaves``);
 interior nodes only become evictable once their subtree is gone, so a
 surviving chain is always a usable prefix.
+
+Invariants the cache and scheduler rely on (exercised by
+kv_cache.check_invariants and tests/test_serve_engine.py):
+
+* **One page, one node** — a page id appears in at most one trie node
+  (``insert`` records only *newly created* nodes and first-writer
+  wins), so the cache can charge exactly one trie reference per
+  resident page and ``pages()`` never double-counts.
+* **Never the null page** — page 0 is the masked-write sink; callers
+  only ever insert allocated prompt pages, and the trie never
+  fabricates ids.
+* **A surviving chain is a usable prefix** — eviction removes leaves
+  only; an interior node's page outlives its children, so any
+  root-to-node walk that ``lookup`` returns describes contiguously
+  resident KV starting at token 0.
+* **Lookups always leave one token to compute** — ``total_shared`` is
+  capped at ``len(tokens) - 1``; generation needs the final prompt
+  token's logits, so a full-prompt hit deliberately under-reports by
+  one (the admission path sizes its scatter from this).
+* **The trie never mutates pages** — it hands out ids read-only;
+  write protection is entirely the cache's refcount/COW discipline
+  (a donated page's refcount includes the trie's reference, which is
+  what makes the donor's own next write fork).
 """
 from __future__ import annotations
 

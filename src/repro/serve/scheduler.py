@@ -4,7 +4,9 @@ One jit'd paged-decode program (fixed batch/page shapes) serves an
 ever-changing population of requests.  The request lifecycle is
 
     submit -> WAITING -> [admit] -> PREFILLING -> DECODING -> finished
-                  ^                                   |
+                  ^                                ^  |
+                  |                     (verify    |  |
+                  |                      round) VERIFYING
                   +--------- preempt (replay) --------+
 
 * **Admission** claims a batch slot and pages; a prompt prefix already
@@ -26,10 +28,24 @@ ever-changing population of requests.  The request lifecycle is
   are replayed through the same decode program, reproducing the
   original stream exactly.  The engine never deadlocks and older
   requests always finish.
+* **Speculative decode** (``spec_k`` > 0): instead of one token per
+  batched decode step, every DECODING slot enters a VERIFYING round —
+  a drafter (serve/spec.py) guesses up to ``spec_k`` tokens, the
+  target model scores all ``k+1`` positions in one batched
+  ``verify_step_paged`` program, and the longest matching draft prefix
+  plus the verifier's bonus token are banked.  Rows with no draft
+  degrade to exactly a decode step, so the verify program *replaces*
+  the decode program rather than running beside it.  Headroom for the
+  whole write window is privatized before the program runs and pages
+  past the confirmed frontier are rolled back after it
+  (kv_cache.ensure_headroom / rollback_spec), so speculation composes
+  with chunked prefill, prefix sharing/COW, and preemption without new
+  aliasing states.
 
 Every step keeps the token-parity guarantee: generated streams are
-bit-identical to the sequential ``greedy_generate`` oracle (see
-docs/serving.md for what would break it).
+bit-identical to the sequential ``greedy_generate`` oracle, with or
+without speculation (see docs/serving.md and docs/speculative.md for
+what would break it).
 """
 from __future__ import annotations
 
@@ -42,7 +58,9 @@ import jax
 import numpy as np
 
 from .kv_cache import PagedKVCache
-from .step import (make_chunk_prefill_step, make_paged_decode_step)
+from .spec import PromptLookupDrafter
+from .step import (make_chunk_prefill_step, make_paged_decode_step,
+                   make_verify_step)
 
 __all__ = ["Request", "ServeEngine", "default_bucket_edges"]
 
@@ -84,7 +102,9 @@ class ServeEngine:
                  eos_id: Optional[int] = None,
                  chunk_size: int = 32,
                  prefix_sharing: bool = True,
-                 bucket_edges: Optional[Sequence[int]] = None):
+                 bucket_edges: Optional[Sequence[int]] = None,
+                 spec_k: int = 0,
+                 drafter=None):
         if not model.supports_paged_decode():
             raise ValueError(f"{model.cfg.name}: paged decode unsupported "
                              "(needs a scanned all-attention stack)")
@@ -109,6 +129,16 @@ class ServeEngine:
         self._decode = jax.jit(make_paged_decode_step(model))
         # one jit wrapper; re-specializes per (bucket) table shape
         self._chunk = jax.jit(make_chunk_prefill_step(model))
+        # speculative decode: drafts are advisory, the verify program
+        # replaces the decode program for DECODING slots (spec_k == 0
+        # keeps the plain one-token decode path)
+        self.spec_k = int(spec_k)
+        if self.spec_k > 0:
+            self.drafter = drafter or PromptLookupDrafter()
+            self._verify = jax.jit(make_verify_step(model))
+        else:
+            self.drafter = None
+            self._verify = None
         self.waiting: deque[Request] = deque()
         self.prefilling: "OrderedDict[int, Request]" = OrderedDict()
         self.active: Dict[int, Request] = {}      # slot -> DECODING req
@@ -118,6 +148,10 @@ class ServeEngine:
         self.n_decode_steps = 0
         self.n_prefill_chunks = 0
         self.n_replay_steps = 0
+        # speculation stats (accept rate = n_draft_accepted / n_drafted)
+        self.n_spec_rounds = 0
+        self.n_drafted = 0
+        self.n_draft_accepted = 0
 
     # --------------------------------------------------------- frontend
     def submit(self, req: Request) -> None:
@@ -152,6 +186,8 @@ class ServeEngine:
         req = self.active.pop(slot)
         self._admit_seq.pop(slot)
         self.cache.free_slot(slot)
+        if self.drafter is not None:
+            self.drafter.detach(slot)
         req.finish_time = now
         self.finished.append(req)
 
@@ -169,6 +205,8 @@ class ServeEngine:
                or self.active.pop(slot, None))
         self._admit_seq.pop(slot)
         self.cache.free_slot(slot)
+        if self.drafter is not None:
+            self.drafter.detach(slot)       # draft state is disposable
         req.n_preemptions += 1
         req.prefill_pos = 0
         self.waiting.appendleft(req)
@@ -303,6 +341,108 @@ class ServeEngine:
             return True
         return self._preempt_youngest(now, exclude=exclude) is not None
 
+    def _ensure_headroom_all(self, now: float, window) -> None:
+        """Privatize/allocate every DECODING slot's write window before
+        a batched program runs, making room (trie eviction, then
+        youngest-preemption) on pressure; slots evicted mid-loop simply
+        drop out of ``self.active``.  ``window`` maps slot -> tokens
+        about to be written (missing slots default to 1)."""
+        for slot in sorted(self.active):
+            need = window.get(slot, 1)
+            while slot in self.active and \
+                    not self.cache.ensure_headroom(slot, need):
+                if not self._make_room(now):
+                    raise RuntimeError(
+                        "single request exceeds total page budget")
+
+    def _masked_state(self) -> dict:
+        """Device state for a batched program with non-DECODING rows
+        masked out: their rows carry the null page table and zero
+        length, so lockstep writes land on page 0 instead of a page
+        mid-ingest."""
+        active_rows = np.zeros((self.max_batch,), bool)
+        for slot in self.active:
+            active_rows[slot] = True
+        tables = np.where(active_rows[:, None], self.cache.page_tables,
+                          0).astype(np.int32)
+        lengths = np.where(active_rows, self.cache.lengths,
+                           0).astype(np.int32)
+        return {"k_pages": self.cache.k_pages,
+                "v_pages": self.cache.v_pages,
+                "page_tables": jax.numpy.asarray(tables),
+                "lengths": jax.numpy.asarray(lengths)}
+
+    # ------------------------------------------------------ speculation
+    def _spec_round(self, now: float) -> None:
+        """One VERIFYING round over every DECODING slot: draft up to
+        ``spec_k`` tokens per row, privatize pages for the whole write
+        window, score all ``k+1`` positions in one batched verify
+        program, bank the longest matching draft prefix plus the
+        verifier's bonus token, then roll back rejected page growth.
+
+        A row whose drafter returns nothing still participates — its
+        round IS a decode step (one write, one bonus token) — so the
+        batch never splits into spec and non-spec programs.  When *no*
+        row drafted anything, the round dispatches the plain 1-wide
+        decode program instead of a (k+1)-wide verify of pure padding;
+        both produce the identical next token, only the width differs."""
+        k = self.spec_k
+        drafts: Dict[int, List[int]] = {}
+        for slot, req in self.active.items():
+            # cap the draft so even full acceptance cannot outrun
+            # max_new_tokens — which also keeps every speculative write
+            # inside the page budget submit() admitted the request under
+            cap = min(k, req.max_new_tokens - len(req.generated) - 1)
+            d = self.drafter.propose(slot, req, cap) if cap > 0 else []
+            drafts[slot] = [int(t) for t in d[:max(cap, 0)]]
+        # page headroom for every position this row can confirm
+        # (n_draft + 1 writes).  Padded verify positions past the window
+        # land on the null page or on this slot's own private pages —
+        # never on shared ones (pages past the write frontier are never
+        # donated to the trie) — so they need no budget.
+        self._ensure_headroom_all(
+            now, {s: len(d) + 1 for s, d in drafts.items()})
+        if not self.active:          # pressure evicted everyone
+            return
+
+        any_draft = any(drafts[slot] for slot in self.active)
+        T = k + 1 if any_draft else 1
+        tokens = np.zeros((self.max_batch, T), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.generated[-1]
+            d = drafts[slot]
+            tokens[slot, 1:1 + len(d)] = d
+        program = self._verify if any_draft else self._decode
+        nxt, state = program(self.params, self._masked_state(),
+                             jax.numpy.asarray(tokens))
+        self.cache.k_pages = state["k_pages"]
+        self.cache.v_pages = state["v_pages"]
+        self.n_decode_steps += 1
+        self.n_spec_rounds += any_draft
+        nxt = np.asarray(nxt)
+
+        for slot in list(self.active):
+            req = self.active[slot]
+            d, row = drafts[slot], nxt[slot]
+            # accept the longest draft prefix the target itself would
+            # have generated; row[a] is then the free bonus token
+            a = 0
+            while a < len(d) and d[a] == int(row[a]):
+                a += 1
+            appended = d[:a] + [int(row[a])]
+            if self.eos_id is not None and self.eos_id in appended:
+                # the oracle stops at eos: anything banked after it
+                # was never generated
+                appended = appended[:appended.index(self.eos_id) + 1]
+            req.generated.extend(appended)
+            self.cache.lengths[slot] += len(appended)
+            self.n_drafted += len(d)
+            # drafts past an accepted eos were never banked
+            self.n_draft_accepted += min(a, len(appended))
+            self.cache.rollback_spec(slot)
+            if self._done(req):
+                self._finish(slot, now)
+
     # ------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:
         """One engine iteration: admit what fits, ingest one prompt
@@ -326,14 +466,15 @@ class ServeEngine:
         if not self.active:
             return bool(self.waiting or self.prefilling)
 
+        if self.spec_k > 0:
+            # VERIFYING replaces the plain decode step: same admission
+            # and prefill pacing above, multi-token verify below
+            self._spec_round(now)
+            return bool(self.active or self.prefilling or self.waiting)
+
         # page headroom for this step's token writes (growth or COW of
         # a trie-donated page); evict on pressure
-        for slot in sorted(self.active):
-            while slot in self.active and \
-                    not self.cache.ensure_headroom(slot):
-                if not self._make_room(now):
-                    raise RuntimeError(
-                        "single request exceeds total page budget")
+        self._ensure_headroom_all(now, {})
 
         if not self.active:          # pressure evicted everyone
             return bool(self.waiting or self.prefilling)
@@ -341,21 +482,7 @@ class ServeEngine:
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for slot, req in self.active.items():
             tokens[slot, 0] = req.generated[-1]
-        # mask PREFILLING slots out of the decode program: their rows
-        # carry the null page table so the lockstep write lands on
-        # page 0, not on a page mid-ingest
-        active_rows = np.zeros((self.max_batch,), bool)
-        for slot in self.active:
-            active_rows[slot] = True
-        tables = np.where(active_rows[:, None], self.cache.page_tables,
-                          0).astype(np.int32)
-        lengths = np.where(active_rows, self.cache.lengths,
-                           0).astype(np.int32)
-        state = {"k_pages": self.cache.k_pages,
-                 "v_pages": self.cache.v_pages,
-                 "page_tables": jax.numpy.asarray(tables),
-                 "lengths": jax.numpy.asarray(lengths)}
-        nxt, state = self._decode(self.params, state,
+        nxt, state = self._decode(self.params, self._masked_state(),
                                   jax.numpy.asarray(tokens))
         self.cache.k_pages = state["k_pages"]
         self.cache.v_pages = state["v_pages"]

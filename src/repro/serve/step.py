@@ -1,7 +1,7 @@
-"""Serving steps: prefill (full-sequence -> cache) and decode (one token
-against the cache).
+"""Serving steps: prefill (full-sequence -> cache), decode (one token
+against the cache), and multi-token speculative verification.
 
-Two decode flavors:
+Four program flavors:
 
 * ``make_decode_step`` — lockstep batch against a contiguous cache; its
   ``greedy_generate`` driver is the *parity oracle* the continuous-
@@ -9,6 +9,27 @@ Two decode flavors:
 * ``make_paged_decode_step`` — per-request positions against a paged KV
   cache (serve/kv_cache.py); one jit'd program serves every mix of
   requests because the batch/page shapes are fixed.
+* ``make_chunk_prefill_step`` — masked single-request prompt ingestion
+  (chunked prefill); context length bucketed by the scheduler.
+* ``make_verify_step`` — score T = k+1 tokens per request in one pass
+  (speculative decode); T = 1 is bit-for-bit one paged decode step.
+
+Invariants every program in this module preserves (the engine's parity
+guarantee composes out of them — docs/serving.md):
+
+* **Fixed shapes, traced values** — batch size, chunk size, page-table
+  width (per bucket), and T are compile-time constants; positions,
+  lengths, and page ids are traced.  One compile serves every request
+  mix, so numerics can never depend on *which* requests are batched.
+* **Greedy argmax at the program boundary** — token selection happens
+  inside the jit'd program in f32 logits; the host only ever sees
+  int32 token ids, never logits to re-reduce.
+* **The caller owns authoritative lengths/tables** — programs treat
+  ``state["lengths"]`` / ``state["page_tables"]`` as read-only inputs
+  (``decode_step_paged`` returns lengths+1 as a convenience the engine
+  overrides); host bookkeeping in serve/kv_cache.py is the source of
+  truth, which is what lets verification advance a *variable* number
+  of positions per step.
 """
 from __future__ import annotations
 
@@ -19,7 +40,7 @@ import jax.numpy as jnp
 
 __all__ = ["make_prefill_step", "make_decode_step",
            "make_paged_decode_step", "make_chunk_prefill_step",
-           "greedy_generate"]
+           "make_verify_step", "greedy_generate"]
 
 
 def make_prefill_step(model, max_len=None) -> Callable:
@@ -48,6 +69,23 @@ def make_paged_decode_step(model, sample: str = "greedy") -> Callable:
             raise ValueError(sample)
         return nxt[:, None], state
     return paged_step
+
+
+def make_verify_step(model, sample: str = "greedy") -> Callable:
+    """Speculative-verification step: score T tokens per request in one
+    batched pass (token 0 = last confirmed token, 1..T-1 = draft) and
+    return (greedy next-token ids (B, T), new page state).  Row b's
+    ``nxt[b, t]`` is the target model's own prediction after consuming
+    tokens 0..t — the host accepts the longest draft prefix that
+    matches and takes ``nxt[b, a]`` as the free bonus token."""
+    def verify_step(params, state, tokens):
+        logits, state = model.verify_step_paged(params, state, tokens)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt, state
+    return verify_step
 
 
 def make_chunk_prefill_step(model, sample: str = "greedy") -> Callable:
