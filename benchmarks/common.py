@@ -12,6 +12,18 @@ from repro.core.isa import Instr, Op
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "benchmarks"
 
 
+class Skip(Exception):
+    """Raised by a benchmark that cannot run in this environment (a
+    missing dependency, too few devices for its mesh, ...).  The
+    harness (benchmarks/run.py) reports the reason in its summary
+    instead of letting the benchmark either crash or silently vanish —
+    a skipped gate must be visible in CI."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
 def save(name: str, payload) -> None:
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2,

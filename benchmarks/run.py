@@ -1,5 +1,5 @@
 """Benchmark harness entry point: one module per paper table/figure,
-plus the serving-throughput benchmark.
+plus the serving-throughput benchmarks.
 
     PYTHONPATH=src python -m benchmarks.run           # everything
     PYTHONPATH=src python -m benchmarks.run table6    # one benchmark
@@ -8,6 +8,10 @@ plus the serving-throughput benchmark.
 ``--smoke`` runs every benchmark at reduced problem size (benches whose
 ``run`` accepts a ``smoke`` kwarg) and fails loudly if any entry point
 errors — the CI guard against perf entry points silently rotting.
+
+A benchmark whose environment requirements aren't met (devices, deps)
+raises ``common.Skip(reason)``; the summary prints the reason instead
+of hiding the benchmark — a gate that didn't run must be visible.
 """
 from __future__ import annotations
 
@@ -15,10 +19,11 @@ import inspect
 import sys
 import time
 
+from .common import Skip
 from . import (fig11_util, fig13_traffic, fig15_energy, fig19_sparse,
                fig22_simd, fig23_scaling, kernel_dataflow, roofline,
-               serve_prefix, serve_spec, serve_throughput, table5_cisc,
-               table6_static)
+               serve_prefix, serve_router, serve_spec, serve_throughput,
+               table5_cisc, table6_static)
 
 BENCHES = {
     "table5": table5_cisc.run,
@@ -28,12 +33,13 @@ BENCHES = {
     "fig15": fig15_energy.run,
     "fig19": fig19_sparse.run,
     "fig22": fig22_simd.run,
-    "fig23": fig23_scaling.run,
     "kernel": kernel_dataflow.run,
     "roofline": roofline.run,
     "serve": serve_throughput.run,
     "serve_prefix": serve_prefix.run,
     "serve_spec": serve_spec.run,
+    "serve_router": serve_router.run,
+    "fig23": fig23_scaling.run,
 }
 
 
@@ -58,6 +64,9 @@ def main(argv):
             ok = all(checks.values()) if checks else True
             summary.append((name, "ok" if ok else "CHECK-FAILED",
                             time.time() - t0, checks))
+        except Skip as s:
+            summary.append((name, f"SKIPPED: {s.reason}",
+                            time.time() - t0, {}))
         except Exception as e:                      # noqa: BLE001
             import traceback
             traceback.print_exc()
@@ -65,9 +74,10 @@ def main(argv):
     print("\n==================== summary ====================")
     failed = 0
     for name, status, dt, checks in summary:
-        flag = "" if status == "ok" else "  <<<<"
-        print(f"{name:10s} {status:14s} {dt:7.1f}s {checks}{flag}")
-        if status != "ok":
+        skipped = status.startswith("SKIPPED")
+        flag = "" if status == "ok" or skipped else "  <<<<"
+        print(f"{name:12s} {status:14s} {dt:7.1f}s {checks}{flag}")
+        if status != "ok" and not skipped:
             failed += 1
     print(f"{len(summary) - failed}/{len(summary)} benchmarks clean")
     return 1 if failed else 0

@@ -1,4 +1,4 @@
-"""Serving example, three tiers:
+"""Serving example, four tiers:
 
 1. Continuous-batching engine (paged KV cache, chunked prefill) on the
    dense-GQA arch: staggered request lengths, mid-flight admission,
@@ -6,10 +6,17 @@
 2. Prefix sharing: the same engine under a shared system prompt —
    requests after the first reuse its KV pages (copy-on-write guards
    the tail) instead of recomputing them.
-3. Lockstep greedy loop across the other cache families (ring-buffer
+3. Multi-replica routing: two engine replicas behind the
+   prefix-affinity router — two shared-prompt workloads are
+   partitioned so each replica's prefix trie serves one of them
+   (token streams identical to any single engine's).
+4. Lockstep greedy loop across the other cache families (ring-buffer
    local attention, recurrent state) — fixed-size states don't page.
 
     PYTHONPATH=src python examples/serve_batched.py
+
+(Tensor-parallel serving needs >1 device; see docs/serving.md and
+``python -m repro.launch.serve --tp 2 --replicas 2``.)
 """
 import time
 
@@ -19,7 +26,7 @@ import numpy as np
 from repro import configs
 from repro.data.pipeline import SyntheticPipeline
 from repro.models import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, RequestRouter, ServeEngine, ServePrograms
 from repro.serve.step import make_decode_step, make_prefill_step
 
 LOCKSTEP_ARCHS = [
@@ -84,6 +91,39 @@ def prefix_demo():
           f"{eng.n_prefill_chunks} prefill chunks")
 
 
+def router_demo():
+    """Two shared-prompt workloads, two replicas: prefix affinity
+    routes each workload to the replica whose trie already holds its
+    system prompt, so neither replica ever re-ingests the other's."""
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    sys_prompts = [rng.integers(0, cfg.vocab_size,
+                                size=(28,)).astype(np.int32)
+                   for _ in range(2)]
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompts[i % 2],
+                         rng.integers(0, cfg.vocab_size,
+                                      size=(8,)).astype(np.int32)]),
+                    max_new_tokens=8)
+            for i in range(8)]
+    programs = ServePrograms(model)      # one compile cache, N replicas
+    replicas = [ServeEngine(model, params, max_batch=4, n_pages=64,
+                            page_size=8, chunk_size=16,
+                            programs=programs) for _ in range(2)]
+    router = RequestRouter(replicas, policy="prefix")
+    t0 = time.time()
+    done = router.run(reqs)
+    dt = time.time() - t0
+    shared = [e.cache.n_shared_tokens for e in replicas]
+    print(f"qwen3-0.6b[router]     {len(done)} reqs, 2 workloads x 2 "
+          f"replicas -> {dt * 1e3:6.0f} ms; dispatched "
+          f"{router.n_dispatched}, {router.n_affinity_hits} affinity "
+          f"hits, prefix tokens reused per replica {shared}")
+
+
 def lockstep_demo():
     for name in LOCKSTEP_ARCHS:
         cfg = configs.get_smoke(name)
@@ -111,6 +151,7 @@ def lockstep_demo():
 def main():
     engine_demo()
     prefix_demo()
+    router_demo()
     lockstep_demo()
 
 

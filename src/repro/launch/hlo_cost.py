@@ -146,11 +146,21 @@ class HloCost:
 
 
 def _split_operands(argstr: str) -> List[str]:
-    """Operand names from an op's argument list (ignores literals)."""
+    """Operand names from an op's argument list (ignores literals).
+
+    The pinned jax 0.4.37 emits *typed* operand lists —
+    ``dot(f32[256,256]{1,0} %Arg_0.1, ...)`` — where naive
+    comma-splitting yields dtype tokens (``f32``) instead of names, so
+    every symtab lookup missed and dot contractions collapsed to 1
+    (the recalibration bug behind the old test_hlo_cost xfails).  When
+    ``%``-prefixed names are present they are authoritative; the bare
+    fallback keeps hand-written HLO fixtures working."""
+    if "%" in argstr:
+        return re.findall(r"%([\w.\-]+)", argstr)
     out = []
     for tok in argstr.split(","):
         tok = tok.strip()
-        m = re.match(r"%?([\w.\-]+)", tok)
+        m = re.match(r"([A-Za-z_][\w.\-]*)", tok)
         if m:
             out.append(m.group(1))
     return out

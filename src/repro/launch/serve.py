@@ -4,8 +4,12 @@ cache (default), or the naive lockstep loop (--naive) for comparison.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 16 --batch 8 --prompt-len 64 --gen 32 --rate 50
 
-Engine knobs (chunk size, page size, context buckets, prefix sharing)
-are documented in docs/serving.md.
+Distributed serving: ``--tp N`` shards every engine over an N-device
+mesh (CPU dev: XLA_FLAGS=--xla_force_host_platform_device_count=N);
+``--replicas M`` puts M engine replicas behind the request router
+(``--router-policy prefix|least-loaded|round-robin``).  The two
+compose.  Engine knobs (chunk size, page size, context buckets, prefix
+sharing) are documented in docs/serving.md.
 """
 from __future__ import annotations
 
@@ -18,7 +22,7 @@ import numpy as np
 from repro import configs
 from repro.data.pipeline import SyntheticPipeline
 from repro.models import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, RequestRouter, ServeEngine, ServePrograms
 from repro.serve.kv_cache import pages_needed
 from repro.serve.step import make_decode_step, make_prefill_step
 
@@ -52,33 +56,62 @@ def synth_requests(cfg, n: int, prompt_len: int, gen: int,
 
 def run_engine(model, params, reqs, *, batch, page_size, n_pages,
                realtime, chunk_size=32, prefix_sharing=True,
-               bucket_edges=None, spec_k=0, drafter=None):
-    eng = ServeEngine(model, params, max_batch=batch, n_pages=n_pages,
-                      page_size=page_size,
-                      max_pages_per_seq=max(
-                          pages_needed(len(r.prompt) + r.max_new_tokens,
-                                       page_size) for r in reqs),
-                      chunk_size=chunk_size,
-                      prefix_sharing=prefix_sharing,
-                      bucket_edges=bucket_edges,
-                      spec_k=spec_k, drafter=drafter)
+               bucket_edges=None, spec_k=0, drafter_factory=None,
+               tp=1, replicas=1, router_policy="prefix"):
+    """Serve ``reqs`` on ``replicas`` engine replicas (each of
+    ``n_pages`` pages, sharded ``tp``-way when tp > 1) and return
+    aggregate stats.  One ``ServePrograms`` bundle is shared by every
+    replica — one compile cache regardless of fleet size."""
+    if tp > 1:
+        from repro.serve.parallel import TPServePrograms
+        programs = TPServePrograms(model, tp=tp)
+    else:
+        programs = ServePrograms(model)
+    mpps = max(pages_needed(len(r.prompt) + r.max_new_tokens, page_size)
+               for r in reqs)
+
+    def mk():
+        return ServeEngine(model, params, max_batch=batch,
+                           n_pages=n_pages, page_size=page_size,
+                           max_pages_per_seq=mpps,
+                           chunk_size=chunk_size,
+                           prefix_sharing=prefix_sharing,
+                           bucket_edges=bucket_edges, spec_k=spec_k,
+                           drafter=(drafter_factory() if drafter_factory
+                                    else None),
+                           programs=programs)
+
+    if replicas > 1:
+        front = RequestRouter([mk() for _ in range(replicas)],
+                              policy=router_policy)
+        engines = front.replicas
+    else:
+        front = mk()
+        engines = [front]
     t0 = time.perf_counter()
-    done = eng.run(reqs, realtime=realtime)
+    done = front.run(reqs, realtime=realtime)
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
     ttfts = [r.ttft for r in done if r.ttft is not None
              and r.ttft != float("inf")]
+    drafted = sum(e.n_drafted for e in engines)
     return {"tokens": toks, "wall_s": dt,
             "tok_per_s": toks / max(dt, 1e-9),
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
-            "decode_steps": eng.n_decode_steps,
-            "prefill_chunks": eng.n_prefill_chunks,
-            "shared_tokens": eng.cache.n_shared_tokens,
-            "cow_copies": eng.cache.n_cow,
-            "spec_rounds": eng.n_spec_rounds,
-            "drafted": eng.n_drafted,
-            "draft_accepted": eng.n_draft_accepted,
-            "accept_rate": eng.n_draft_accepted / max(eng.n_drafted, 1)}
+            "decode_steps": sum(e.n_decode_steps for e in engines),
+            "prefill_chunks": sum(e.n_prefill_chunks for e in engines),
+            "shared_tokens": sum(e.cache.n_shared_tokens
+                                 for e in engines),
+            "cow_copies": sum(e.cache.n_cow for e in engines),
+            "spec_rounds": sum(e.n_spec_rounds for e in engines),
+            "drafted": drafted,
+            "draft_accepted": sum(e.n_draft_accepted for e in engines),
+            "accept_rate": sum(e.n_draft_accepted for e in engines)
+            / max(drafted, 1),
+            "dispatched": (front.n_dispatched if replicas > 1
+                           else [len(done)]),
+            "affinity_hits": (front.n_affinity_hits if replicas > 1
+                              else 0)}
 
 
 def run_naive(model, params, cfg, args):
@@ -144,6 +177,17 @@ def main():
                     help="arch id of a draft model for speculation "
                          "(default: model-free n-gram prompt lookup); "
                          "resolved at the same --smoke size as --arch")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard each engine's "
+                         "attention heads, FFN and paged KV cache over "
+                         "a tp-device mesh (token streams unchanged)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the request router "
+                         "(each gets its own --n-pages pool)")
+    ap.add_argument("--router-policy", type=str, default="prefix",
+                    choices=["prefix", "least-loaded", "round-robin"],
+                    help="replica selection: prefix affinity (default),"
+                         " least outstanding tokens, or round-robin")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke if args.smoke else configs.get)(args.arch)
@@ -164,29 +208,41 @@ def main():
     edges = ([int(e) for e in args.bucket_edges.split(",")]
              if args.bucket_edges else None)
     spec_k = 0 if args.no_spec else args.spec_k
-    drafter = None
+    drafter_factory = None
     if spec_k and args.draft_config:
         from repro.serve import DraftModelDrafter
         dcfg = (configs.get_smoke if args.smoke
                 else configs.get)(args.draft_config)
         dmodel = build_model(dcfg)
-        drafter = DraftModelDrafter(
-            dmodel, dmodel.init(jax.random.PRNGKey(1)), cfg_target=cfg)
+        dparams = dmodel.init(jax.random.PRNGKey(1))
+
+        # one drafter per replica: drafter state is keyed by batch slot
+        def drafter_factory():
+            return DraftModelDrafter(dmodel, dparams, cfg_target=cfg)
     stats = run_engine(model, params, reqs, batch=args.batch,
                        page_size=args.page_size, n_pages=n_pages,
                        realtime=True, chunk_size=args.chunk_size,
                        prefix_sharing=not args.no_prefix_sharing,
                        bucket_edges=edges, spec_k=spec_k,
-                       drafter=drafter)
+                       drafter_factory=drafter_factory,
+                       tp=args.tp, replicas=args.replicas,
+                       router_policy=args.router_policy)
     spec_note = (f"{stats['spec_rounds']} verify rounds, "
                  f"accept rate {stats['accept_rate']:.2f} "
                  f"({stats['draft_accepted']}/{stats['drafted']} drafts), "
                  if spec_k else "")
+    dist_note = ""
+    if args.tp > 1 or args.replicas > 1:
+        dist_note = (f"tp={args.tp} x {args.replicas} replica(s) "
+                     f"[{args.router_policy}] "
+                     f"dispatched {stats['dispatched']}, "
+                     f"{stats['affinity_hits']} affinity hits, ")
     print(f"{args.requests} requests ({args.shared_prefix}+"
           f"{args.prompt_len}+{args.gen} tok) "
           f"batch={args.batch} pages={n_pages}x{args.page_size}: "
           f"{stats['tok_per_s']:.1f} tok/s, "
           f"TTFT {stats['ttft_mean_s'] * 1e3:.0f} ms, "
+          f"{dist_note}"
           f"{stats['decode_steps']} decode steps, "
           f"{spec_note}"
           f"{stats['prefill_chunks']} prefill chunks, "

@@ -467,8 +467,21 @@ def attention_block(p, x, cfg, *, positions, causal=True,
     return constrain(out, ("batch", "seq", "act_embed")), new_cache
 
 
+def _tp_gather_heads(x, tp_axis, axis: int):
+    """Re-assemble a head-sharded activation inside a ``shard_map``
+    tensor-parallel program (serve/parallel.py): an all-gather is a
+    pure concatenation in mesh-axis order — no cross-shard *reduction*
+    ever runs, which is what keeps the sharded program bit-identical
+    to the single-device one (shard i computes exactly the slice of
+    every op the single device would have computed for its heads).
+    ``tp_axis=None`` (the single-device path) is a no-op."""
+    if tp_axis is None:
+        return x
+    return lax.all_gather(x, tp_axis, axis=axis, tiled=True)
+
+
 def paged_attention_block(p, x, cfg, *, positions, k_pages, v_pages,
-                          page_table, lengths):
+                          page_table, lengths, tp_axis=None):
     """Paged decode attention sub-layer (continuous batching).
 
     x: (B, 1, D) with *per-request* positions (B, 1) — unlike
@@ -480,6 +493,12 @@ def paged_attention_block(p, x, cfg, *, positions, k_pages, v_pages,
     Inactive batch slots carry an all-zero page table, so their writes
     land on the reserved null page (see serve/kv_cache.py) and never
     corrupt live data.  Returns (out, k_pages, v_pages).
+
+    Under tensor parallelism (``tp_axis`` set, see serve/parallel.py)
+    ``cfg`` is the *local* per-shard view: q/k/v carry this shard's
+    heads, the page buffers hold this shard's KV-head slice, and the
+    heads are re-gathered (concatenation, never reduction) before the
+    replicated output projection.
     """
     from ..kernels.paged_attention.ref import paged_attention_ref
     B, S, D = x.shape
@@ -493,13 +512,15 @@ def paged_attention_block(p, x, cfg, *, positions, k_pages, v_pages,
     v_pages = v_pages.at[pidx, slot].set(v[:, 0].astype(v_pages.dtype))
     out = paged_attention_ref(q[:, 0], k_pages, v_pages, page_table,
                               lengths + 1)
-    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    out = _tp_gather_heads(out, tp_axis, axis=1)       # (B, H, Dh)
+    out = out.reshape(B, 1, -1)
     out = out @ p["wo"].astype(out.dtype)
     return out, k_pages, v_pages
 
 
 def paged_verify_attention_block(p, x, cfg, *, positions, k_pages,
-                                 v_pages, page_table, lengths):
+                                 v_pages, page_table, lengths,
+                                 tp_axis=None):
     """Speculative-verification attention sub-layer (paged decode with a
     query-time axis).
 
@@ -537,13 +558,15 @@ def paged_verify_attention_block(p, x, cfg, *, positions, k_pages,
     v_pages = v_pages.at[pidx, slot].set(v.astype(v_pages.dtype))
     out = paged_verify_attention_ref(q, k_pages, v_pages, page_table,
                                      lengths)
-    out = out.reshape(B, T, cfg.n_heads * cfg.head_dim)
+    out = _tp_gather_heads(out, tp_axis, axis=2)       # (B, T, H, Dh)
+    out = out.reshape(B, T, -1)
     out = out @ p["wo"].astype(out.dtype)
     return out, k_pages, v_pages
 
 
 def paged_chunk_attention_block(p, x, cfg, *, positions, start, n_valid,
-                                k_pages, v_pages, table_row):
+                                k_pages, v_pages, table_row,
+                                tp_axis=None):
     """Chunked-prefill attention sub-layer over a paged KV cache.
 
     x: (1, C, D) — one request's next prompt chunk, token t sitting at
@@ -578,7 +601,8 @@ def paged_chunk_attention_block(p, x, cfg, *, positions, start, n_valid,
     vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, start, 0, 0))
     out = flash_attention(q, kc, vc, causal=True,
                           kv_chunk=cfg.attn_kv_chunk, q_offset=start)
-    out = out.reshape(B, C, cfg.n_heads * cfg.head_dim)
+    out = _tp_gather_heads(out, tp_axis, axis=2)       # (1, C, H, Dh)
+    out = out.reshape(B, C, -1)
     out = out @ p["wo"].astype(out.dtype)
     return out, k, v
 
@@ -626,15 +650,22 @@ def mlp_specs(cfg, d_ff: Optional[int] = None) -> dict:
     }
 
 
-def mlp_block(p, x, cfg):
+def mlp_block(p, x, cfg, tp_axis=None):
+    """Dense FFN.  Under tensor parallelism (``tp_axis`` set, see
+    serve/parallel.py) the up projections are sharded over the hidden
+    dim and the hidden activation is re-gathered (concatenation, no
+    reduction) before the replicated down projection — the same
+    bitwise-preserving split as the attention head gather."""
     if cfg.mlp_kind == "gelu":
         h = x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype)
         h = jax.nn.gelu(h)
         h = constrain(h, ("batch", None, "act_ff"))
+        h = _tp_gather_heads(h, tp_axis, axis=2)
         return h @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)
     g = jax.nn.silu(x @ p["wg"].astype(x.dtype))
     u = x @ p["wu"].astype(x.dtype)
     h = constrain(g * u, ("batch", None, "act_ff"))
+    h = _tp_gather_heads(h, tp_axis, axis=2)
     out = h @ p["wd"].astype(x.dtype)
     return constrain(out, ("batch", "seq", "act_embed"))
 

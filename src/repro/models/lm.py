@@ -406,7 +406,7 @@ class DecoderLM:
         }
 
     def prefill_chunk_paged(self, params, state, tokens, table_row,
-                            start, n_valid):
+                            start, n_valid, tp_axis=None):
         """Ingest one prompt chunk of a single request into the paged
         KV cache (chunked prefill).
 
@@ -424,9 +424,14 @@ class DecoderLM:
         dtype == page dtype), and every other op is per-token — so any
         chunking of the prompt reproduces ``prefill``'s last-token
         logits and cache bit-for-bit.
+
+        ``tp_axis``: mesh axis name when running as the per-shard body
+        of a tensor-parallel ``shard_map`` program (serve/parallel.py;
+        ``self`` is then the shard-local model view).
         """
         assert self.supports_paged_decode()
         cfg = self.cfg
+        assert not (tp_axis is not None and cfg.moe is not None)
         dtype = jnp.dtype(cfg.compute_dtype)
         n = tokens.shape[1]
         positions = (start + jnp.arange(n, dtype=jnp.int32))[None]
@@ -440,13 +445,13 @@ class DecoderLM:
             mix, k, v = C.paged_chunk_attention_block(
                 lp["mix"], h, cfg, positions=positions, start=start,
                 n_valid=n_valid, k_pages=kp, v_pages=vp,
-                table_row=table_row)
+                table_row=table_row, tp_axis=tp_axis)
             x = x + mix
             h2 = C.apply_norm(lp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
             if use_moe:
                 f, _ = C.moe_block(lp["ffn"], h2, cfg)
             else:
-                f = C.mlp_block(lp["ffn"], h2, cfg)
+                f = C.mlp_block(lp["ffn"], h2, cfg, tp_axis=tp_axis)
             return x + f, (k, v)
 
         x, (ks, vs) = lax.scan(
@@ -469,7 +474,7 @@ class DecoderLM:
         logits = C.unembed(params["embed"], last, cfg)
         return logits[:, 0], {"k_pages": k_pages, "v_pages": v_pages}
 
-    def decode_step_paged(self, params, state, tokens):
+    def decode_step_paged(self, params, state, tokens, tp_axis=None):
         """One continuous-batching decode step against a paged KV cache.
 
         ``state``: {k_pages, v_pages: (L, P, ps, KVH, Dh); page_tables:
@@ -478,9 +483,13 @@ class DecoderLM:
         lockstep).  Returns (logits (B, V), new state) with lengths
         advanced; callers that mask inactive slots (the serve engine)
         own the authoritative lengths host-side.
+
+        ``tp_axis``: mesh axis name when running as the per-shard body
+        of a tensor-parallel ``shard_map`` program (serve/parallel.py).
         """
         assert self.supports_paged_decode()
         cfg = self.cfg
+        assert not (tp_axis is not None and cfg.moe is not None)
         dtype = jnp.dtype(cfg.compute_dtype)
         lengths = state["lengths"]
         tables = state["page_tables"]
@@ -494,13 +503,14 @@ class DecoderLM:
             h = C.apply_norm(lp["ln1"], x, cfg.norm_kind, cfg.norm_eps)
             mix, kp, vp = C.paged_attention_block(
                 lp["mix"], h, cfg, positions=positions, k_pages=kp,
-                v_pages=vp, page_table=tables, lengths=lengths)
+                v_pages=vp, page_table=tables, lengths=lengths,
+                tp_axis=tp_axis)
             x = x + mix
             h2 = C.apply_norm(lp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
             if use_moe:
                 f, _ = C.moe_block(lp["ffn"], h2, cfg)
             else:
-                f = C.mlp_block(lp["ffn"], h2, cfg)
+                f = C.mlp_block(lp["ffn"], h2, cfg, tp_axis=tp_axis)
             return x + f, (kp, vp)
 
         x, (k_pages, v_pages) = lax.scan(
@@ -513,7 +523,7 @@ class DecoderLM:
                               "page_tables": tables,
                               "lengths": lengths + 1}
 
-    def verify_step_paged(self, params, state, tokens):
+    def verify_step_paged(self, params, state, tokens, tp_axis=None):
         """Score T tokens per request in one batched pass against the
         paged KV cache (speculative-decode verification).
 
@@ -537,6 +547,7 @@ class DecoderLM:
         """
         assert self.supports_paged_decode()
         cfg = self.cfg
+        assert not (tp_axis is not None and cfg.moe is not None)
         dtype = jnp.dtype(cfg.compute_dtype)
         lengths = state["lengths"]
         tables = state["page_tables"]
@@ -552,13 +563,14 @@ class DecoderLM:
             h = C.apply_norm(lp["ln1"], x, cfg.norm_kind, cfg.norm_eps)
             mix, kp, vp = C.paged_verify_attention_block(
                 lp["mix"], h, cfg, positions=positions, k_pages=kp,
-                v_pages=vp, page_table=tables, lengths=lengths)
+                v_pages=vp, page_table=tables, lengths=lengths,
+                tp_axis=tp_axis)
             x = x + mix
             h2 = C.apply_norm(lp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
             if use_moe:
                 f, _ = C.moe_block(lp["ffn"], h2, cfg)
             else:
-                f = C.mlp_block(lp["ffn"], h2, cfg)
+                f = C.mlp_block(lp["ffn"], h2, cfg, tp_axis=tp_axis)
             return x + f, (kp, vp)
 
         x, (k_pages, v_pages) = lax.scan(

@@ -1,8 +1,13 @@
 from .kv_cache import PagedKVCache  # noqa: F401
 from .prefix import PrefixCache  # noqa: F401
+from .router import RequestRouter  # noqa: F401
 from .scheduler import Request, ServeEngine, default_bucket_edges  # noqa: F401,E501
 from .spec import DraftModelDrafter, PromptLookupDrafter  # noqa: F401
 from .step import (  # noqa: F401
-    greedy_generate, make_chunk_prefill_step, make_decode_step,
-    make_paged_decode_step, make_prefill_step, make_verify_step,
+    ServePrograms, greedy_generate, make_chunk_prefill_step,
+    make_decode_step, make_paged_decode_step, make_prefill_step,
+    make_verify_step,
 )
+
+# serve.parallel (TPServePrograms) is imported lazily by ServeEngine:
+# it pulls in mesh/shard_map machinery single-device serving never needs

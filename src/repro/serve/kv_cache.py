@@ -14,6 +14,13 @@ Device layout (for a scanned all-attention stack of L layers):
     page_tables      : (max_batch, max_pages_per_seq)     int32
     lengths          : (max_batch,)                       int32
 
+Under tensor-parallel serving (serve/parallel.py) the page arrays are
+sharded on the KVH axis — each device holds every page's slice of its
+own KV heads — while page tables, lengths, and ALL of this module's
+host-side bookkeeping stay replicated/device-agnostic: a page id means
+"the same page on every shard", so allocation, refcounts, COW, the
+prefix trie, and speculation rollback are untouched by the mesh.
+
 Invariants the engine relies on (exercised by check_invariants and
 tests/test_serve_engine.py):
 

@@ -1,0 +1,184 @@
+"""Tensor-parallel serving: the paged decode / verify / chunked-prefill
+programs shard_map'd over a ``tp`` mesh axis.
+
+This is the scale-*up* half of distributed serving (serve/router.py is
+the scale-*out* half): one engine, its KV memory system and attention
+arithmetic sharded across devices.  The sharding layout is chosen so
+the sharded engine is **bit-identical** to the single-device one — the
+serve stack's token-parity guarantee survives the mesh:
+
+* **What is sharded.**  Attention heads: wq/wk/wv (and their biases)
+  are split on the head output dim, so shard i computes heads
+  ``[i*H/tp, (i+1)*H/tp)`` — and the paged KV cache splits the same
+  way, ``k_pages/v_pages: (L, P, ps, KVH/tp, Dh)`` per device, which
+  is the memory-system scaling that motivates TP serving in the first
+  place (a single chip's HBM bounds resident KV; tp chips bound tp×).
+  The FFN hidden dim (wg/wu, gelu w1/b1) splits identically.
+* **What is replicated.**  Page tables, lengths, tokens, norms, the
+  embedding/unembedding table, and the contraction-side projections
+  wo / wd (w2).  Every shard therefore holds the *full* residual
+  stream and computes the (cheap) unembed redundantly.
+* **Why it is bitwise.**  No cross-shard *reduction* ever runs.  Each
+  shard's ops are exactly the head/hidden slice of the single-device
+  ops (XLA computes each output element's contraction identically
+  regardless of sibling columns), and the only collectives are
+  ``all_gather``s — concatenations in mesh order — placed just before
+  the replicated wo/wd projections (components._tp_gather_heads).  A
+  psum-based megatron layout would be cheaper on interconnect but
+  reorders the output-projection summation, breaking parity; on real
+  hardware you would trade that consciously (docs/ARCHITECTURE.md).
+
+The per-shard program body is the *unchanged* model code run on a
+shard-local view: ``DecoderLM`` over a cfg with ``n_heads``,
+``n_kv_heads`` and ``d_ff`` divided by tp (plus ``tp_axis`` gather
+hooks).  Host-side scheduling (serve/scheduler.py, serve/kv_cache.py)
+is untouched — page ids are device-agnostic, so the allocator, prefix
+trie, COW and speculation bookkeeping cannot tell the engine is
+sharded.
+
+Scope: the dense scanned-attention family (``supports_paged_decode``
+and ``cfg.moe is None`` — moe_block owns its own shard_map, which
+cannot nest inside this one); tp must divide n_heads, n_kv_heads and
+d_ff.  Development and CI run on forced-host-device CPU meshes
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``); the layout
+is device-count-, not device-kind-, specific.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import make_mesh
+from ..sharding.compat import shard_map_compat
+from ..sharding.rules import SERVE_TP_AXIS, serve_tp_spec
+from .step import (make_chunk_prefill_step, make_paged_decode_step,
+                   make_verify_step)
+
+__all__ = ["TPServePrograms", "make_tp_mesh", "validate_tp",
+           "tp_param_specs", "PAGE_SPEC"]
+
+#: k_pages/v_pages (L, n_pages, page_size, KVH, Dh): sharded on the
+#: KV-head axis, the serving analogue of the training rules' act_heads.
+PAGE_SPEC = P(None, None, None, SERVE_TP_AXIS)
+
+
+def make_tp_mesh(tp: int):
+    """A 1-D ``tp``-axis mesh over the first ``tp`` local devices."""
+    n = len(jax.devices())
+    if tp > n:
+        raise ValueError(f"tp={tp} exceeds {n} visible devices "
+                         "(CPU dev: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    return make_mesh((tp,), (SERVE_TP_AXIS,))
+
+
+def validate_tp(model, tp: int) -> None:
+    cfg = model.cfg
+    if not model.supports_paged_decode():
+        raise ValueError(f"{cfg.name}: tensor-parallel serving covers "
+                         "the paged-decode family only")
+    if cfg.moe is not None:
+        raise ValueError(f"{cfg.name}: MoE FFNs run their own "
+                         "shard_map (components.moe_block), which "
+                         "cannot nest inside the serving TP program")
+    for dim, v in (("n_heads", cfg.n_heads),
+                   ("n_kv_heads", cfg.n_kv_heads), ("d_ff", cfg.d_ff)):
+        if v % tp:
+            raise ValueError(f"{cfg.name}: tp={tp} does not divide "
+                             f"{dim}={v}")
+
+
+def tp_param_specs(model):
+    """PartitionSpec pytree mirroring ``model.param_specs()`` under the
+    serving TP layout (sharding/rules.serve_tp_spec per leaf)."""
+    import jax.tree_util as jtu
+
+    def leaf_spec(path, ps):
+        return serve_tp_spec(path[-1].key, len(ps.shape))
+
+    return jtu.tree_map_with_path(
+        leaf_spec, model.param_specs(),
+        is_leaf=lambda x: hasattr(x, "axes"))
+
+
+def _local_model(model, tp: int):
+    """Shard-local view: the same DecoderLM over a cfg whose sharded
+    dims are divided by tp — inside shard_map the param shards *are*
+    full tensors of this smaller model, so the model code runs
+    unchanged (only the _tp_gather_heads hooks know about the mesh)."""
+    cfg = model.cfg
+    local = dataclasses.replace(
+        cfg, n_heads=cfg.n_heads // tp, n_kv_heads=cfg.n_kv_heads // tp,
+        d_ff=cfg.d_ff // tp)
+    return type(model)(local)
+
+
+class TPServePrograms:
+    """Sharded counterpart of step.ServePrograms: same attribute
+    surface (decode / chunk / verify callables with identical
+    signatures, prepare_params / prepare_pages hooks), so ServeEngine
+    uses either interchangeably — and N router replicas can share one
+    instance to share one compile cache."""
+
+    def __init__(self, model, *, tp: Optional[int] = None, mesh=None):
+        if mesh is None:
+            if tp is None or tp < 2:
+                raise ValueError("TPServePrograms needs tp >= 2 or an "
+                                 "explicit mesh")
+            mesh = make_tp_mesh(tp)
+        if SERVE_TP_AXIS not in mesh.axis_names:
+            raise ValueError(f"mesh axes {mesh.axis_names} lack "
+                             f"'{SERVE_TP_AXIS}'")
+        self.mesh = mesh
+        self.tp = mesh.shape[SERVE_TP_AXIS]
+        validate_tp(model, self.tp)
+        self.model = model
+        self._local = _local_model(model, self.tp)
+        self._pspecs = tp_param_specs(model)
+        full_state = {"k_pages": PAGE_SPEC, "v_pages": PAGE_SPEC,
+                      "page_tables": P(), "lengths": P()}
+        kv_state = {"k_pages": PAGE_SPEC, "v_pages": PAGE_SPEC}
+        self.decode = jax.jit(shard_map_compat(
+            make_paged_decode_step(self._local, tp_axis=SERVE_TP_AXIS),
+            mesh=mesh, in_specs=(self._pspecs, full_state, P()),
+            out_specs=(P(), full_state), check_vma=False))
+        self.chunk = jax.jit(shard_map_compat(
+            make_chunk_prefill_step(self._local, tp_axis=SERVE_TP_AXIS),
+            mesh=mesh,
+            in_specs=(self._pspecs, kv_state, P(), P(), P(), P()),
+            out_specs=(P(), kv_state), check_vma=False))
+        self._verify = None
+        self._params_cache: Dict[int, object] = {}
+
+    @property
+    def verify(self):
+        if self._verify is None:
+            full_state = {"k_pages": PAGE_SPEC, "v_pages": PAGE_SPEC,
+                          "page_tables": P(), "lengths": P()}
+            self._verify = jax.jit(shard_map_compat(
+                make_verify_step(self._local, tp_axis=SERVE_TP_AXIS),
+                mesh=self.mesh,
+                in_specs=(self._pspecs, full_state, P()),
+                out_specs=(P(), full_state), check_vma=False))
+        return self._verify
+
+    def prepare_params(self, params):
+        """device_put ``params`` into the TP layout (cached by object
+        identity so router replicas sharing one params tree also share
+        one sharded copy; the original is kept referenced so a
+        recycled id can never alias a dead tree)."""
+        key = id(params)
+        if key not in self._params_cache:
+            shardings = jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), self._pspecs,
+                is_leaf=lambda x: isinstance(x, P))
+            self._params_cache[key] = (
+                params, jax.device_put(params, shardings))
+        return self._params_cache[key][1]
+
+    def prepare_pages(self, pages):
+        return jax.device_put(pages, NamedSharding(self.mesh, PAGE_SPEC))

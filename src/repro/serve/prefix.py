@@ -78,18 +78,15 @@ class PrefixCache:
         self.n_nodes = 0
 
     # ---------------------------------------------------------- queries
-    def lookup(self, tokens) -> Tuple[List[Tuple[int, int]], int]:
-        """Longest shared prefix of ``tokens`` resident in the trie.
-
-        Returns ([(page_id, n_usable_tokens), ...], total_shared) with
-        every entry full (``ps`` tokens) except possibly the last.
-        ``total_shared`` is capped at ``len(tokens) - 1`` so the caller
-        always computes at least the final prompt token (its logits
-        seed generation).
-        """
-        toks = [int(t) for t in tokens]
-        if not toks:
-            return [], 0
+    def _descend(self, toks) -> Tuple[List[Tuple["_Node", int]], int]:
+        """Shared traversal behind ``lookup`` and ``probe``: the
+        longest resident run of ``toks`` as [(node, n_tokens)],
+        uncapped and side-effect-free.  Full-page children descend
+        exactly; otherwise the longest common prefix against any child
+        yields one final partial hit — if it covers at least half a
+        page (a partial hit forces a copy-on-write page copy at the
+        attach site; tiny accidental overlaps between unrelated
+        prompts cost more than they save)."""
         node, out, shared = self.root, [], 0
         while shared < len(toks):
             rem = toks[shared:]
@@ -105,13 +102,34 @@ class PrefixCache:
                 cp = _common_prefix(ch.key[:ch.n_tokens], rem)
                 if cp > best_cp:
                     best, best_cp = ch, cp
-            # a partial hit forces a copy-on-write page copy at the
-            # attach site; tiny accidental overlaps between unrelated
-            # prompts cost more than they save
             if best is not None and best_cp >= max(1, self.ps // 2):
                 out.append((best, best_cp))
                 shared += best_cp
             break
+        return out, shared
+
+    def probe(self, tokens) -> int:
+        """Read-only residency probe: how many leading tokens of
+        ``tokens`` the trie could serve right now.  Unlike ``lookup``
+        it neither bumps LRU clocks nor caps at ``len(tokens) - 1`` —
+        it exists for *observers* (the request router's prefix-affinity
+        scoring, serve/router.py), whose curiosity must not protect
+        pages from eviction or perturb engine behavior."""
+        return self._descend([int(t) for t in tokens])[1]
+
+    def lookup(self, tokens) -> Tuple[List[Tuple[int, int]], int]:
+        """Longest shared prefix of ``tokens`` resident in the trie.
+
+        Returns ([(page_id, n_usable_tokens), ...], total_shared) with
+        every entry full (``ps`` tokens) except possibly the last.
+        ``total_shared`` is capped at ``len(tokens) - 1`` so the caller
+        always computes at least the final prompt token (its logits
+        seed generation).
+        """
+        toks = [int(t) for t in tokens]
+        if not toks:
+            return [], 0
+        out, shared = self._descend(toks)
         if shared >= len(toks):            # leave >= 1 token to compute
             over = shared - (len(toks) - 1)
             node_, cnt = out[-1]

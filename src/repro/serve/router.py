@@ -1,0 +1,215 @@
+"""Multi-replica request router: one front-end queue over N
+independent serve-engine replicas.
+
+This is the scale-*out* half of distributed serving (serve/parallel.py
+is the scale-*up* half): replicas are whole engines — each with its
+own batch slots, page pool, and prefix trie — and the router decides
+*which* replica serves each request.  Replicas may themselves be
+tensor-parallel (``ServeEngine(tp=...)``); the two compose.
+
+Routing policies (``policy=``):
+
+* ``"prefix"`` (default) — **prefix affinity**: land a request on the
+  replica whose trie already holds its prompt prefix, so the KV
+  compute (and pages) for a shared system prompt are paid once *per
+  replica that ever sees the workload* instead of once per request.
+  Affinity is scored from two sources: a read-only trie probe
+  (``PrefixCache.probe`` — ground truth for what is resident *now*)
+  and the router's own recent-dispatch record (what will *become*
+  resident once in-flight requests donate their prompts — a burst of
+  same-prefix requests must not scatter just because the first one
+  hasn't finished prefilling).  Ties, and prefixes nobody holds, fall
+  back to least-outstanding-tokens.
+* ``"least-loaded"`` — least outstanding tokens: queued + in-flight
+  work (remaining prompt ingestion plus remaining generation budget),
+  the standard N-queues load balancer.
+* ``"round-robin"`` — dispatch order, ignoring both load and
+  affinity; the baseline the policy tests compare against.
+
+**Backpressure.**  Each replica accepts at most ``max_inflight``
+requests (default ``2 * max_batch``: a full batch plus one queued
+wave).  When every replica is at its cap the router simply *holds* the
+queue — requests are never dropped and never reordered (FIFO; a
+held head blocks later requests, which keeps arrival order fair and
+routing deterministic).
+
+**Why the aggregate scales.**  The router's throughput story is the
+TPU-paper memory argument one level up: a single replica's page pool
+bounds how many distinct hot prefixes stay resident — a workload
+cycling through more prompt groups than the trie can hold LRU-thrashes
+and re-prefills every admission.  N replicas hold N pools, and prefix
+affinity *partitions* the groups across them, so each replica's
+working set fits again (benchmarks/serve_router.py measures exactly
+this regime).  Token streams are unchanged by construction: every
+replica is a token-exact engine and routing only chooses *where* a
+stream is produced.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .scheduler import Request, ServeEngine
+
+__all__ = ["RequestRouter", "ROUTER_POLICIES"]
+
+ROUTER_POLICIES = ("prefix", "least-loaded", "round-robin")
+
+
+class RequestRouter:
+    def __init__(self, replicas: Sequence[ServeEngine], *,
+                 policy: str = "prefix",
+                 max_inflight: Optional[int] = None,
+                 affinity_record: int = 1024):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {ROUTER_POLICIES}")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self.max_inflight = (max_inflight if max_inflight is not None
+                             else 2 * max(e.max_batch for e in replicas))
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self.queue: deque[Request] = deque()
+        self._rr = 0                     # round-robin cursor
+        # replica -> LRU-ordered page-run keys of recently dispatched
+        # prompts (before their pages can appear in the trie)
+        self._recent: List[Dict[Tuple[int, ...], None]] = [
+            {} for _ in replicas]
+        self._recent_cap = affinity_record
+        # stats
+        self.n_dispatched = [0] * len(replicas)
+        self.n_affinity_hits = 0         # dispatches with affinity > 0
+
+    # ---------------------------------------------------------- frontend
+    def submit(self, req: Request) -> None:
+        """Queue a request; fails fast (ValueError) if NO replica could
+        ever admit it.  Heterogeneous fleets are fine — dispatch only
+        considers replicas that can take the request."""
+        err = None
+        for eng in self.replicas:
+            try:
+                eng.check_admissible(req)
+                self.queue.append(req)
+                return
+            except ValueError as e:
+                err = e
+        raise err
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self.queue) + sum(e.n_inflight for e in self.replicas)
+
+    # --------------------------------------------------------- affinity
+    def _page_keys(self, prompt) -> List[Tuple[int, ...]]:
+        ps = self.replicas[0].cache.page_size
+        toks = [int(t) for t in prompt]
+        return [tuple(toks[:(j + 1) * ps])
+                for j in range(len(toks) // ps)]
+
+    def _record_dispatch(self, i: int, prompt) -> None:
+        rec = self._recent[i]
+        for key in self._page_keys(prompt):
+            rec.pop(key, None)               # re-dispatch refreshes LRU
+            rec[key] = None
+        while len(rec) > self._recent_cap:   # evict least recently sent
+            rec.pop(next(iter(rec)))
+
+    def _affinity(self, i: int, prompt) -> int:
+        """Tokens of ``prompt`` replica ``i`` (probably) holds: the max
+        of trie ground truth and the recent-dispatch record."""
+        eng = self.replicas[i]
+        resident = (eng.cache.prefix.probe(prompt)
+                    if eng.cache.prefix is not None else 0)
+        ps = eng.cache.page_size
+        rec, planned = self._recent[i], 0
+        for n, key in enumerate(self._page_keys(prompt)):
+            if key not in rec:
+                break
+            planned = (n + 1) * ps
+        return max(resident, planned)
+
+    # -------------------------------------------------------- dispatch
+    def _outstanding_tokens(self, i: int) -> int:
+        eng = self.replicas[i]
+        reqs = list(eng.waiting) + list(eng.prefilling.values()) \
+            + list(eng.active.values())
+        return sum(len(r.prompt) - r.prefill_pos + r.max_new_tokens
+                   - len(r.generated) for r in reqs)
+
+    def _can_admit(self, i: int, req: Request) -> bool:
+        try:
+            self.replicas[i].check_admissible(req)
+            return True
+        except ValueError:
+            return False
+
+    def _pick(self, req: Request) -> Optional[int]:
+        n = len(self.replicas)
+        eligible = [i for i in range(n)
+                    if self.replicas[i].n_inflight < self.max_inflight
+                    and self._can_admit(i, req)]
+        if not eligible:
+            return None                  # backpressure: hold the queue
+        if self.policy == "round-robin":
+            for off in range(n):
+                i = (self._rr + off) % n
+                if i in eligible:
+                    self._rr = (i + 1) % n
+                    return i
+        load = {i: self._outstanding_tokens(i) for i in eligible}
+        if self.policy == "prefix":
+            aff = {i: self._affinity(i, req.prompt) for i in eligible}
+            best = max(aff.values())
+            if best > 0:
+                self.n_affinity_hits += 1
+                eligible = [i for i in eligible if aff[i] == best]
+        return min(eligible, key=lambda i: (load[i], i))
+
+    # ------------------------------------------------------------- step
+    def step(self, now: float = float("inf")) -> bool:
+        """One router iteration: place every arrived queued request a
+        replica will take (FIFO), then pump one engine step on every
+        replica with work.  Returns True while anything is queued or
+        in flight."""
+        while self.queue and self.queue[0].arrival <= now:
+            i = self._pick(self.queue[0])
+            if i is None:
+                break
+            req = self.queue.popleft()
+            self.replicas[i].submit(req)
+            self._record_dispatch(i, req.prompt)
+            self.n_dispatched[i] += 1
+        busy = False
+        for eng in self.replicas:
+            if eng.n_inflight:
+                eng.step(now)
+                busy = True
+        return busy or bool(self.queue)
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: List[Request], *,
+            realtime: bool = False) -> List[Request]:
+        """Drive to completion; returns the requests completed by THIS
+        call, in completion order (``Request.rid`` identifies streams).
+        Mirrors ``ServeEngine.run``'s realtime semantics."""
+        first = {id(e): len(e.finished) for e in self.replicas}
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while True:
+            now = (time.perf_counter() - t0) if realtime else float("inf")
+            if not self.step(now=now):
+                break
+            if realtime and self.queue \
+                    and not any(e.n_inflight for e in self.replicas):
+                time.sleep(max(0.0, self.queue[0].arrival
+                               - (time.perf_counter() - t0)))
+        done = []
+        for e in self.replicas:
+            done.extend(e.finished[first[id(e)]:])
+        done.sort(key=lambda r: (r.finish_time, r.rid))
+        return done

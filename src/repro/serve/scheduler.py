@@ -59,8 +59,7 @@ import numpy as np
 
 from .kv_cache import PagedKVCache
 from .spec import PromptLookupDrafter
-from .step import (make_chunk_prefill_step, make_paged_decode_step,
-                   make_verify_step)
+from .step import ServePrograms
 
 __all__ = ["Request", "ServeEngine", "default_bucket_edges"]
 
@@ -104,7 +103,10 @@ class ServeEngine:
                  prefix_sharing: bool = True,
                  bucket_edges: Optional[Sequence[int]] = None,
                  spec_k: int = 0,
-                 drafter=None):
+                 drafter=None,
+                 programs: Optional[ServePrograms] = None,
+                 tp: int = 1,
+                 mesh=None):
         if not model.supports_paged_decode():
             raise ValueError(f"{model.cfg.name}: paged decode unsupported "
                              "(needs a scanned all-attention stack)")
@@ -113,12 +115,29 @@ class ServeEngine:
             # trace (kv_cache.pages_needed) when the wider page tables
             # cost too much gather bandwidth
             max_pages_per_seq = n_pages - 1
-        self.model, self.params = model, params
+        # the serving programs are engine-independent (one compile
+        # cache shared by every replica built on the same bundle);
+        # tp > 1 / mesh swaps in the shard_map'd tensor-parallel
+        # bundle — the scheduler below cannot tell the difference
+        if programs is None:
+            if tp > 1 or mesh is not None:
+                from .parallel import TPServePrograms
+                programs = TPServePrograms(model, tp=tp, mesh=mesh)
+            else:
+                programs = ServePrograms(model)
+        elif programs.model is not model:
+            raise ValueError("programs were built for a different model")
+        self.programs = programs
+        self.tp = programs.tp
+        self.model = model
+        self.params = programs.prepare_params(params)
         self.eos_id = eos_id
         self.cache = PagedKVCache(model, max_batch=max_batch,
                                   n_pages=n_pages, page_size=page_size,
                                   max_pages_per_seq=max_pages_per_seq,
                                   prefix_sharing=prefix_sharing)
+        self.cache.k_pages = programs.prepare_pages(self.cache.k_pages)
+        self.cache.v_pages = programs.prepare_pages(self.cache.v_pages)
         self.max_batch = max_batch
         self.chunk_size = chunk_size
         if bucket_edges is None:
@@ -126,16 +145,16 @@ class ServeEngine:
         self.bucket_edges = sorted(set(int(b) for b in bucket_edges))
         if self.bucket_edges[-1] < max_pages_per_seq:
             self.bucket_edges.append(max_pages_per_seq)
-        self._decode = jax.jit(make_paged_decode_step(model))
+        self._decode = programs.decode
         # one jit wrapper; re-specializes per (bucket) table shape
-        self._chunk = jax.jit(make_chunk_prefill_step(model))
+        self._chunk = programs.chunk
         # speculative decode: drafts are advisory, the verify program
         # replaces the decode program for DECODING slots (spec_k == 0
         # keeps the plain one-token decode path)
         self.spec_k = int(spec_k)
         if self.spec_k > 0:
             self.drafter = drafter or PromptLookupDrafter()
-            self._verify = jax.jit(make_verify_step(model))
+            self._verify = programs.verify
         else:
             self.drafter = None
             self._verify = None
@@ -154,11 +173,13 @@ class ServeEngine:
         self.n_draft_accepted = 0
 
     # --------------------------------------------------------- frontend
-    def submit(self, req: Request) -> None:
-        """Queue a request; rejects (ValueError) one that could never
-        be admitted — otherwise the engine would spin on it forever.
-        The budget reserves alloc_slot's +1 decode-headroom page (a
-        preempted request must be re-admittable at its longest)."""
+    def check_admissible(self, req: Request) -> None:
+        """Raise ValueError for a request this engine could never admit
+        — otherwise it would spin on it forever.  The budget reserves
+        alloc_slot's +1 decode-headroom page (a preempted request must
+        be re-admittable at its longest).  Exposed separately from
+        ``submit`` so a front-end (serve/router.py) can fail fast
+        before choosing a replica."""
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid}: empty prompt (there is "
                              "no last-token logit to seed generation)")
@@ -169,6 +190,10 @@ class ServeEngine:
                 f"request {req.rid}: {len(req.prompt)}+{req.max_new_tokens}"
                 f" tokens need {need} pages of {self.cache.page_size};"
                 f" per-request page budget is {budget}")
+
+    def submit(self, req: Request) -> None:
+        """Queue a request (see ``check_admissible`` for rejection)."""
+        self.check_admissible(req)
         self.waiting.append(req)
 
     @property

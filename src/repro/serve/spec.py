@@ -37,6 +37,7 @@ Invariants the engine relies on:
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict, List
 
 import numpy as np
@@ -75,9 +76,13 @@ class PromptLookupDrafter:
     trailing plateau ``[x, x]`` correctly finds its own earlier
     ``(x, x) -> x`` occurrence.  Index entries hold references to the
     per-request context lists, so a continuation keeps extending as
-    its source request generates; ``max_entries`` (summed over scopes)
-    bounds memory with a wholesale reset (crude, but the index is a
-    pure performance hint).
+    its source request generates.  ``max_entries`` (summed over
+    scopes) bounds memory with a **per-scope LRU**: when the budget
+    overflows, whole least-recently-*used* scopes are dropped —
+    scope granularity because statistics within a workload age
+    together, and LRU because the hot workload of the moment is
+    exactly the one whose index is earning accepts (the old wholesale
+    reset re-cooled every workload each time one overgrew).
     """
 
     def __init__(self, max_ngram: int = 3, min_ngram: int = 1,
@@ -88,9 +93,11 @@ class PromptLookupDrafter:
         self.scope_tokens = scope_tokens
         self.max_entries = max_entries
         self._n_entries = 0
-        # scope -> ngram -> (ctx_list, pos)
-        self._scopes: Dict[tuple, Dict[tuple, tuple]] = {}
+        # scope -> ngram -> (ctx_list, pos); ordered oldest-used first
+        self._scopes: "OrderedDict[tuple, Dict[tuple, tuple]]" = \
+            OrderedDict()
         self._slots: Dict[int, dict] = {}
+        self.n_scope_evictions = 0
 
     def propose(self, slot: int, req, k: int) -> List[int]:
         st = self._slots.get(slot)
@@ -103,10 +110,11 @@ class PromptLookupDrafter:
         for t in req.generated[st["ngen"]:]:
             ctx.append(int(t))
         st["ngen"] = len(req.generated)
-        if self._n_entries >= self.max_entries:
-            self._scopes.clear()
-            self._n_entries = 0
-        index = self._scopes.setdefault(st["scope"], {})
+        index = self._scopes.get(st["scope"])
+        if index is None:
+            index = self._scopes[st["scope"]] = {}
+        else:
+            self._scopes.move_to_end(st["scope"])   # LRU touch
         # index every n-gram whose continuation is now confirmed
         for j in range(st["cursor"], len(ctx) - 1):
             for n in range(self.min_ngram, self.max_ngram + 1):
@@ -115,6 +123,17 @@ class PromptLookupDrafter:
                     self._n_entries += key not in index
                     index[key] = (ctx, j + 1)
         st["cursor"] = max(st["cursor"], len(ctx) - 1)
+        # over budget: drop whole least-recently-used scopes (never the
+        # one in use — it was just touched to the back of the order)
+        while self._n_entries > self.max_entries and len(self._scopes) > 1:
+            _, evicted = self._scopes.popitem(last=False)
+            self._n_entries -= len(evicted)
+            self.n_scope_evictions += 1
+        if self._n_entries > self.max_entries:
+            # one degenerate scope alone exceeds the budget: reset it
+            self._n_entries -= len(index)
+            index.clear()
+            self.n_scope_evictions += 1
         if k <= 0:
             return []
         for n in range(self.max_ngram, self.min_ngram - 1, -1):

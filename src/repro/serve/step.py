@@ -33,14 +33,14 @@ guarantee composes out of them — docs/serving.md):
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["make_prefill_step", "make_decode_step",
            "make_paged_decode_step", "make_chunk_prefill_step",
-           "make_verify_step", "greedy_generate"]
+           "make_verify_step", "greedy_generate", "ServePrograms"]
 
 
 def make_prefill_step(model, max_len=None) -> Callable:
@@ -60,9 +60,11 @@ def make_decode_step(model, sample: str = "greedy") -> Callable:
     return serve_step
 
 
-def make_paged_decode_step(model, sample: str = "greedy") -> Callable:
+def make_paged_decode_step(model, sample: str = "greedy",
+                           tp_axis: Optional[str] = None) -> Callable:
     def paged_step(params, state, tokens):
-        logits, state = model.decode_step_paged(params, state, tokens)
+        logits, state = model.decode_step_paged(params, state, tokens,
+                                                tp_axis=tp_axis)
         if sample == "greedy":
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
@@ -71,7 +73,8 @@ def make_paged_decode_step(model, sample: str = "greedy") -> Callable:
     return paged_step
 
 
-def make_verify_step(model, sample: str = "greedy") -> Callable:
+def make_verify_step(model, sample: str = "greedy",
+                     tp_axis: Optional[str] = None) -> Callable:
     """Speculative-verification step: score T tokens per request in one
     batched pass (token 0 = last confirmed token, 1..T-1 = draft) and
     return (greedy next-token ids (B, T), new page state).  Row b's
@@ -79,7 +82,8 @@ def make_verify_step(model, sample: str = "greedy") -> Callable:
     tokens 0..t — the host accepts the longest draft prefix that
     matches and takes ``nxt[b, a]`` as the free bonus token."""
     def verify_step(params, state, tokens):
-        logits, state = model.verify_step_paged(params, state, tokens)
+        logits, state = model.verify_step_paged(params, state, tokens,
+                                                tp_axis=tp_axis)
         if sample == "greedy":
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
@@ -88,7 +92,8 @@ def make_verify_step(model, sample: str = "greedy") -> Callable:
     return verify_step
 
 
-def make_chunk_prefill_step(model, sample: str = "greedy") -> Callable:
+def make_chunk_prefill_step(model, sample: str = "greedy",
+                            tp_axis: Optional[str] = None) -> Callable:
     """Chunked-prefill step: ingest up to C prompt tokens of one
     request into the paged cache and return (greedy next token (1, 1),
     new page state).  The token is only meaningful on the chunk that
@@ -96,13 +101,53 @@ def make_chunk_prefill_step(model, sample: str = "greedy") -> Callable:
     earlier chunks' logits are discarded by the engine."""
     def chunk_step(params, state, tokens, table_row, start, n_valid):
         logits, state = model.prefill_chunk_paged(
-            params, state, tokens, table_row, start, n_valid)
+            params, state, tokens, table_row, start, n_valid,
+            tp_axis=tp_axis)
         if sample == "greedy":
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
             raise ValueError(sample)
         return nxt[:, None], state
     return chunk_step
+
+
+class ServePrograms:
+    """The jit-compiled serving programs (decode / chunked prefill /
+    verify) for one model, independent of any engine instance.
+
+    Engines historically built their own ``jax.jit`` wrappers, which
+    meant N replicas of the same model paid N compiles of the *same*
+    program (jit caches are per-wrapper) — measured as the dominant
+    cost of a multi-replica run at smoke sizes.  A ``ServePrograms``
+    is built once and shared: every ``ServeEngine(programs=...)``
+    reuses one compile cache across replicas.  The verify program is
+    built lazily so non-speculative engines never trace it.
+
+    The tensor-parallel counterpart (same attribute surface, programs
+    shard_map'd over a mesh) is serve/parallel.py's
+    ``TPServePrograms``; the engine treats the two interchangeably.
+    """
+
+    tp = 1          # single-device: no mesh, params/pages used as-is
+
+    def __init__(self, model):
+        self.model = model
+        self.decode = jax.jit(make_paged_decode_step(model))
+        self.chunk = jax.jit(make_chunk_prefill_step(model))
+        self._verify = None
+
+    @property
+    def verify(self):
+        if self._verify is None:
+            self._verify = jax.jit(make_verify_step(self.model))
+        return self._verify
+
+    # sharding hooks (overridden by TPServePrograms)
+    def prepare_params(self, params):
+        return params
+
+    def prepare_pages(self, pages):
+        return pages
 
 
 def greedy_generate(model, params, prompt_batch, n_steps: int,

@@ -30,8 +30,35 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 __all__ = [
     "ShardingRules", "DEFAULT_RULES", "logical_spec", "named_sharding",
-    "tree_shardings", "constrain",
+    "tree_shardings", "constrain", "SERVE_TP_AXIS", "serve_tp_spec",
 ]
+
+# --------------------------------------------------------------------------
+# serving tensor parallelism (serve/parallel.py)
+# --------------------------------------------------------------------------
+
+#: Mesh axis name the tensor-parallel serve engine shards over.  It is
+#: deliberately *not* a ShardingRules axis: the serving TP layout must
+#: stay bit-identical to single-device decode, so it only ever shards
+#: dims whose ops need no cross-shard reduction (see serve_tp_spec);
+#: the training rules above are free to trade exactness for layout.
+SERVE_TP_AXIS = "tp"
+
+#: Param leaves the serving TP layout shards, always on their LAST dim
+#: (the projection *output*): wq/wk/wv + biases by heads, wg/wu (and
+#: gelu w1/b1) by the FFN hidden dim.  Everything contracted *over* a
+#: sharded dim (wo, wd/w2, embed/unembed, norms) stays replicated and
+#: consumes an all-gathered activation instead — a concatenation, not
+#: a reduction, which is what preserves bitwise token parity.
+SERVE_TP_SHARDED_LEAVES = frozenset(
+    {"wq", "wk", "wv", "bq", "bk", "bv", "wg", "wu", "w1", "b1"})
+
+
+def serve_tp_spec(leaf_name: str, ndim: int) -> "PartitionSpec":
+    """PartitionSpec of one param leaf under the serving TP layout."""
+    if leaf_name in SERVE_TP_SHARDED_LEAVES:
+        return PartitionSpec(*([None] * (ndim - 1) + [SERVE_TP_AXIS]))
+    return PartitionSpec()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -240,6 +240,52 @@ def test_prompt_lookup_drafter_semantics():
     assert not d._slots
 
 
+def _scoped_request(rid, scope_token, generated):
+    r = Request(rid=rid,
+                prompt=np.full((4,), scope_token, np.int32),
+                max_new_tokens=64)
+    r.generated = list(generated)
+    return r
+
+
+def test_prompt_lookup_index_evicts_lru_scope_only():
+    """At the entry budget the index drops whole least-recently-used
+    scopes; the scope in use survives (the old wholesale reset cooled
+    every workload whenever one overgrew)."""
+    d = PromptLookupDrafter(max_ngram=2, min_ngram=1, scope_tokens=4,
+                            max_entries=24)
+    # three workloads populate three scopes, oldest first
+    for i, tok in enumerate((1, 2, 3)):
+        d.propose(i, _scoped_request(i, tok, [7, 8, 7, 8, 7]), 0)
+    assert len(d._scopes) == 3 and d.n_scope_evictions == 0
+    # touch scope 1 so scope 0 is now the stalest
+    d.propose(1, _scoped_request(10, 2, [7, 8, 7, 8, 7, 8]), 0)
+    # a fourth workload overflows the budget -> scope 0 evicted
+    d.propose(3, _scoped_request(3, 4, [7, 8, 7, 8, 7]), 0)
+    assert d.n_scope_evictions >= 1
+    scopes = set(d._scopes)
+    assert (1,) * 4 not in scopes, "evicted the hot scope, not the LRU"
+    assert (4,) * 4 in scopes, "the in-use scope must survive"
+    # surviving scopes still draft; the evicted one restarts cold
+    rb = _scoped_request(20, 2, [7])
+    assert d.propose(4, rb, 2) == [8, 7]
+    rc = _scoped_request(21, 1, [7])
+    assert d.propose(5, rc, 2) == []
+    assert d._n_entries == sum(len(ix) for ix in d._scopes.values())
+
+
+def test_prompt_lookup_single_giant_scope_resets_itself():
+    """A single scope exceeding the whole budget resets in place
+    instead of looping the LRU forever."""
+    d = PromptLookupDrafter(max_ngram=2, min_ngram=1, scope_tokens=4,
+                            max_entries=8)
+    seq = list(range(40))                 # 40 distinct unigram entries
+    d.propose(0, _scoped_request(0, 1, seq), 0)
+    assert d.n_scope_evictions >= 1
+    assert d._n_entries <= 8
+    assert len(d._scopes) == 1           # scope still registered
+
+
 # -------------------------------------------- allocator spec invariants
 def make_cache(model, **kw):
     kw = {"max_batch": 4, "n_pages": 24, "page_size": 8,
