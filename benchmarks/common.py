@@ -30,6 +30,28 @@ def save(name: str, payload) -> None:
                                                      default=str))
 
 
+def warm_serve_arms(engines, make_requests) -> None:
+    """Drive a small warmup trace through every benchmark arm so jit
+    compiles land outside the measured window.
+
+    The serving programs specialize on the page-pool shape (``n_pages``
+    × ``page_size``), the prefill batch, and each context bucket a
+    trace touches — so warmup MUST run on engines with the arms' exact
+    pool/batch shapes (usually the measured engines themselves, or a
+    throwaway engine sharing their ``ServePrograms`` bundle *and*
+    shapes).  A mismatched warmup doesn't fail; it silently recompiles
+    mid-measurement, which is how two earlier benchmarks grew the same
+    subtle bug this helper hoists away.
+
+    ``make_requests()`` must return *fresh* ``Request`` objects on
+    every call (engines fill ``.generated`` in place), with a token
+    population disjoint from the measured trace wherever the arm's
+    prefix trie / drafter must start cold.
+    """
+    for eng in engines:
+        eng.run(make_requests(), realtime=False)
+
+
 def fmt_table(rows: List[Dict], cols: List[str]) -> str:
     if not rows:
         return "  ".join(cols) + "\n(no rows)"

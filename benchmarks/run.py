@@ -19,11 +19,11 @@ import inspect
 import sys
 import time
 
-from .common import Skip
+from .common import Skip, save
 from . import (fig11_util, fig13_traffic, fig15_energy, fig19_sparse,
                fig22_simd, fig23_scaling, kernel_dataflow, roofline,
-               serve_prefix, serve_router, serve_spec, serve_throughput,
-               table5_cisc, table6_static)
+               serve_prefill, serve_prefix, serve_router, serve_spec,
+               serve_throughput, table5_cisc, table6_static)
 
 BENCHES = {
     "table5": table5_cisc.run,
@@ -37,10 +37,18 @@ BENCHES = {
     "roofline": roofline.run,
     "serve": serve_throughput.run,
     "serve_prefix": serve_prefix.run,
+    "serve_prefill": serve_prefill.run,
     "serve_spec": serve_spec.run,
     "serve_router": serve_router.run,
     "fig23": fig23_scaling.run,
 }
+
+
+def _metrics(out: dict) -> dict:
+    """Scalar metrics worth tracking across PRs (gates are reported
+    separately; tables and token dumps are noise at trend granularity)."""
+    return {k: v for k, v in (out or {}).items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
 
 
 def main(argv):
@@ -63,23 +71,32 @@ def main(argv):
                       if isinstance(v, bool)}
             ok = all(checks.values()) if checks else True
             summary.append((name, "ok" if ok else "CHECK-FAILED",
-                            time.time() - t0, checks))
+                            time.time() - t0, checks, _metrics(out)))
         except Skip as s:
             summary.append((name, f"SKIPPED: {s.reason}",
-                            time.time() - t0, {}))
+                            time.time() - t0, {}, {}))
         except Exception as e:                      # noqa: BLE001
             import traceback
             traceback.print_exc()
-            summary.append((name, f"ERROR: {e}", time.time() - t0, {}))
+            summary.append((name, f"ERROR: {e}", time.time() - t0, {}, {}))
     print("\n==================== summary ====================")
     failed = 0
-    for name, status, dt, checks in summary:
+    for name, status, dt, checks, _ in summary:
         skipped = status.startswith("SKIPPED")
         flag = "" if status == "ok" or skipped else "  <<<<"
         print(f"{name:12s} {status:14s} {dt:7.1f}s {checks}{flag}")
         if status != "ok" and not skipped:
             failed += 1
     print(f"{len(summary) - failed}/{len(summary)} benchmarks clean")
+    # machine-readable perf trajectory: one consolidated file per run
+    # (per-benchmark JSONs remain the detailed record) so cross-PR
+    # tooling reads one artifact instead of re-deriving the roll-up
+    save("summary", {
+        "smoke": smoke,
+        "benchmarks": {
+            name: {"status": status, "seconds": round(dt, 2),
+                   "gates": checks, "metrics": metrics}
+            for name, status, dt, checks, metrics in summary}})
     return 1 if failed else 0
 
 

@@ -23,7 +23,7 @@ from repro.serve import ServeEngine
 from repro.serve.kv_cache import pages_needed
 from repro.launch.serve import synth_requests
 
-from .common import fmt_table, save
+from .common import fmt_table, save, warm_serve_arms
 
 ARCH = "qwen3-0.6b"
 
@@ -65,16 +65,16 @@ def run(smoke: bool = False, batch: int = 4) -> dict:
         return synth_requests(cfg, n_req, unique_len, gen, rate=500.0,
                               seed=seed, prefix_len=prefix_len)
 
-    engines = {}
-    for share in (True, False):
-        eng = ServeEngine(model, params, max_batch=batch,
-                          n_pages=n_pages, page_size=page_size,
-                          max_pages_per_seq=pages_needed(total, page_size),
-                          chunk_size=chunk, prefix_sharing=share)
-        # warmup compiles every program (distinct prefix seed, so the
-        # measured run's trie starts cold for its own prefix)
-        eng.run(fresh(99)[:2], realtime=False)
-        engines[share] = eng
+    engines = {
+        share: ServeEngine(model, params, max_batch=batch,
+                           n_pages=n_pages, page_size=page_size,
+                           max_pages_per_seq=pages_needed(total, page_size),
+                           chunk_size=chunk, prefix_sharing=share)
+        for share in (True, False)}
+    # compiles every program at the arms' exact pool shape (distinct
+    # prefix seed, so the measured run's trie starts cold for its own
+    # prefix)
+    warm_serve_arms(engines.values(), lambda: fresh(99)[:2])
 
     shared = _trace(engines[True], fresh(1))
     unshared = _trace(engines[False], fresh(1))

@@ -47,7 +47,7 @@ from repro.models import build_model
 from repro.serve import Request, RequestRouter, ServeEngine, ServePrograms
 from repro.serve.kv_cache import pages_needed
 
-from .common import Skip, fmt_table, save
+from .common import Skip, fmt_table, save, warm_serve_arms
 
 ARCH = "qwen3-0.6b"
 N_GROUPS = 6           # shared-prefix groups cycling through the trace
@@ -77,6 +77,10 @@ def _grouped_trace(cfg, per_group: int, gen: int, seed: int = 0):
 
 
 def _engine(model, params, programs, n_pages, total, **kw):
+    # serialized prefill (prefill_batch default 1) in BOTH arms: this
+    # benchmark isolates prefix *residency*; co-ingestion has its own
+    # A/B (benchmarks/serve_prefill.py) and would shrink both arms'
+    # dispatch counts alike here
     return ServeEngine(model, params, max_batch=BATCH, n_pages=n_pages,
                        page_size=PAGE, chunk_size=CHUNK,
                        max_pages_per_seq=pages_needed(total, PAGE),
@@ -95,7 +99,7 @@ def _serve(engines, router_policy, reqs):
     return {"tokens": {r.rid: np.asarray(r.generated, np.int32)
                        for r in done},
             "tok_per_s": toks / max(dt, 1e-9),
-            "dispatches": sum(e.n_prefill_chunks + e.n_decode_steps
+            "dispatches": sum(e.n_prefill_dispatches + e.n_decode_steps
                               for e in engines),
             "shared_tokens": sum(e.cache.n_shared_tokens
                                  for e in engines),
@@ -120,11 +124,12 @@ def run(smoke: bool = False, tp: int = 0) -> dict:
     programs = ServePrograms(model)
 
     # warmup covers every chunk bucket + the decode shape (cold AND
-    # prefix-hit admissions) at the arms' exact page-pool shape —
-    # programs specialize on (n_pages, bucket), so a different pool
-    # size would leave the first arm recompiling mid-measurement
-    warm = _engine(model, params, programs, n_pages, total)
-    warm.run(_grouped_trace(cfg, 2, gen, seed=99)[:N_GROUPS + 1])
+    # prefix-hit admissions) on a throwaway engine sharing the arms'
+    # ServePrograms bundle at their exact page-pool shape — the
+    # measured engines' own tries must start cold
+    warm_serve_arms([_engine(model, params, programs, n_pages, total)],
+                    lambda: _grouped_trace(cfg, 2, gen,
+                                           seed=99)[:N_GROUPS + 1])
 
     # fresh Request objects per arm: engines fill .generated in place
     single = _serve([_engine(model, params, programs, n_pages, total)],

@@ -42,7 +42,7 @@ from repro.serve import ServeEngine
 from repro.serve.kv_cache import pages_needed
 from repro.launch.serve import synth_requests
 
-from .common import fmt_table, save
+from .common import fmt_table, save, warm_serve_arms
 
 ARCH = "qwen3-0.6b"
 SPEC_K = 6
@@ -89,17 +89,16 @@ def run(smoke: bool = False, batch: int = 4) -> dict:
         return synth_requests(cfg, n_req, unique_len, gen, rate=500.0,
                               seed=seed, prefix_len=prefix_len)
 
-    engines = {}
-    for k in (SPEC_K, 0):
-        eng = ServeEngine(model, params, max_batch=batch,
-                          n_pages=n_pages, page_size=page_size,
-                          max_pages_per_seq=pages_needed(total, page_size),
-                          chunk_size=chunk, spec_k=k)
-        # warmup compiles every program (verify for the spec arm,
-        # decode for the baseline; distinct prefix seed keeps the
-        # measured workload cold for trie and drafter alike)
-        eng.run(fresh(99)[:2], realtime=False)
-        engines[k] = eng
+    engines = {
+        k: ServeEngine(model, params, max_batch=batch,
+                       n_pages=n_pages, page_size=page_size,
+                       max_pages_per_seq=pages_needed(total, page_size),
+                       chunk_size=chunk, spec_k=k)
+        for k in (SPEC_K, 0)}
+    # compiles every program at each arm's exact pool shape (verify for
+    # the spec arm, decode for the baseline; the distinct prefix seed
+    # keeps the measured workload cold for trie and drafter alike)
+    warm_serve_arms(engines.values(), lambda: fresh(99)[:2])
 
     # rep 0 = cold drafter; reps 1+ = recurring-workload steady state.
     # Arms alternate back to back so wall-clock noise hits both alike.

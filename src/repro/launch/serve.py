@@ -55,7 +55,8 @@ def synth_requests(cfg, n: int, prompt_len: int, gen: int,
 
 
 def run_engine(model, params, reqs, *, batch, page_size, n_pages,
-               realtime, chunk_size=32, prefix_sharing=True,
+               realtime, chunk_size=32, prefill_batch=1,
+               prefix_sharing=True,
                bucket_edges=None, spec_k=0, drafter_factory=None,
                tp=1, replicas=1, router_policy="prefix"):
     """Serve ``reqs`` on ``replicas`` engine replicas (each of
@@ -75,6 +76,7 @@ def run_engine(model, params, reqs, *, batch, page_size, n_pages,
                            n_pages=n_pages, page_size=page_size,
                            max_pages_per_seq=mpps,
                            chunk_size=chunk_size,
+                           prefill_batch=prefill_batch,
                            prefix_sharing=prefix_sharing,
                            bucket_edges=bucket_edges, spec_k=spec_k,
                            drafter=(drafter_factory() if drafter_factory
@@ -95,11 +97,16 @@ def run_engine(model, params, reqs, *, batch, page_size, n_pages,
     ttfts = [r.ttft for r in done if r.ttft is not None
              and r.ttft != float("inf")]
     drafted = sum(e.n_drafted for e in engines)
+    n_pf_disp = sum(e.n_prefill_dispatches for e in engines)
+    n_pf_chunks = sum(e.n_prefill_chunks for e in engines)
     return {"tokens": toks, "wall_s": dt,
             "tok_per_s": toks / max(dt, 1e-9),
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
             "decode_steps": sum(e.n_decode_steps for e in engines),
-            "prefill_chunks": sum(e.n_prefill_chunks for e in engines),
+            "prefill_chunks": n_pf_chunks,
+            "prefill_dispatches": n_pf_disp,
+            "prefill_rows_mean": n_pf_chunks / max(n_pf_disp, 1),
+            "engine_stats": [e.stats() for e in engines],
             "shared_tokens": sum(e.cache.n_shared_tokens
                                  for e in engines),
             "cow_copies": sum(e.cache.n_cow for e in engines),
@@ -160,6 +167,15 @@ def main():
                     help="0 -> sized to the trace")
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="prompt tokens ingested per engine step")
+    ap.add_argument("--prefill-batch", type=int, default=0,
+                    help="requests co-ingesting one prompt chunk each "
+                         "per prefill dispatch (0 -> --batch; 1 -> "
+                         "serialized PR 2 path; tokens are unchanged, "
+                         "only dispatch count)")
+    ap.add_argument("--stats", action="store_true",
+                    help="dump per-engine counter stats (dispatches, "
+                         "co-ingestion occupancy, cache reuse) after "
+                         "the run")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the prefix cache (recompute every "
                          "prompt from scratch)")
@@ -222,6 +238,7 @@ def main():
     stats = run_engine(model, params, reqs, batch=args.batch,
                        page_size=args.page_size, n_pages=n_pages,
                        realtime=True, chunk_size=args.chunk_size,
+                       prefill_batch=args.prefill_batch or args.batch,
                        prefix_sharing=not args.no_prefix_sharing,
                        bucket_edges=edges, spec_k=spec_k,
                        drafter_factory=drafter_factory,
@@ -245,9 +262,16 @@ def main():
           f"{dist_note}"
           f"{stats['decode_steps']} decode steps, "
           f"{spec_note}"
-          f"{stats['prefill_chunks']} prefill chunks, "
+          f"{stats['prefill_chunks']} prefill chunks in "
+          f"{stats['prefill_dispatches']} dispatches "
+          f"({stats['prefill_rows_mean']:.2f} rows/dispatch), "
           f"{stats['shared_tokens']} prefix tokens reused, "
           f"{stats['cow_copies']} COW copies")
+    if args.stats:
+        for i, es in enumerate(stats["engine_stats"]):
+            print(f"engine[{i}] stats: "
+                  + ", ".join(f"{k}={v:.2f}" if isinstance(v, float)
+                              else f"{k}={v}" for k, v in es.items()))
 
 
 if __name__ == "__main__":

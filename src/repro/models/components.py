@@ -209,8 +209,12 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
     kept factored — KV is never materialized per Q head).  Memory is
     O(Sq * kv_chunk) per head instead of O(Sq * Skv).
 
-    ``q_offset`` is the absolute position of q[0] (decode / chunked use).
-    Returns (B,Sq,H,Dh).
+    ``q_offset`` is the absolute position of q[0] (decode / chunked use);
+    a (B,)-shaped ``q_offset`` gives every batch row its own offset (the
+    batched chunked-prefill shape, where co-ingested requests sit at
+    different prompt depths) — masking is then per (row, q, k) but the
+    arithmetic is unchanged, so a row's output depends only on its own
+    offset and buffer.  Returns (B,Sq,H,Dh).
 
     The KV chunk partition is *anchored at absolute position 0 with a
     fixed chunk size*: a ragged Skv is padded up to a multiple of
@@ -233,7 +237,10 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     n_chunks = (Skv + pad) // kv_chunk
-    q_pos = q_offset + jnp.arange(Sq)
+    q_offset = jnp.asarray(q_offset)
+    # (Sq,) for a shared offset, (B, Sq) for per-row offsets
+    q_pos = (q_offset[:, None] if q_offset.ndim else q_offset) \
+        + jnp.arange(Sq)
     scale = 1.0 / math.sqrt(Dh)
 
     kc = k.reshape(B, n_chunks, kv_chunk, KVH, Dh)
@@ -247,12 +254,15 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
         s = jnp.einsum("bqkgd,bjkd->bkgqj", qh, ks,
                        preferred_element_type=jnp.float32) * scale
         k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
-        mask = (k_pos < Skv)[None, :] & jnp.ones((Sq, 1), bool)
+        mask = (k_pos < Skv) & jnp.ones((Sq, 1), bool)
         if causal:
-            mask &= k_pos[None, :] <= q_pos[:, None]
+            mask = mask & (k_pos <= q_pos[..., None])
         if window is not None:
-            mask &= k_pos[None, :] > q_pos[:, None] - window
-        s = jnp.where(mask[None, None, None], s, -1e30)
+            mask = mask & (k_pos > q_pos[..., None] - window)
+        # (Sq, j) shared mask vs (B, Sq, j) per-row mask
+        bmask = mask[:, None, None] if mask.ndim == 3 \
+            else mask[None, None, None]
+        s = jnp.where(bmask, s, -1e30)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -564,44 +574,53 @@ def paged_verify_attention_block(p, x, cfg, *, positions, k_pages,
     return out, k_pages, v_pages
 
 
-def paged_chunk_attention_block(p, x, cfg, *, positions, start, n_valid,
-                                k_pages, v_pages, table_row,
+def paged_chunk_attention_block(p, x, cfg, *, positions, starts, n_valid,
+                                k_pages, v_pages, table_rows,
                                 tp_axis=None):
-    """Chunked-prefill attention sub-layer over a paged KV cache.
+    """Batched chunked-prefill attention sub-layer over a paged KV
+    cache: one chunk each for up to B co-ingesting requests.
 
-    x: (1, C, D) — one request's next prompt chunk, token t sitting at
-    absolute position ``start + t``; rows with t >= ``n_valid`` are
-    padding (fixed chunk shape -> one jit compile).  ``table_row``:
-    (nb,) int32 — the request's page table truncated to its context
-    bucket, covering every position < start + n_valid.
+    x: (B, C, D) — row b is one request's next prompt chunk, token t
+    sitting at absolute position ``starts[b] + t``; tokens with
+    t >= ``n_valid[b]`` are padding, and rows with ``n_valid[b] == 0``
+    are wholly inactive (fixed (B, C) shape -> one jit compile per
+    context bucket regardless of how many requests co-ingest).
+    ``table_rows``: (B, nb) int32 — each request's page table truncated
+    to the dispatch's shared context bucket, covering every position
+    < starts[b] + n_valid[b]; inactive rows and entries past a row's
+    own allocation carry the null page.
 
-    Earlier chunks' context is gathered from pages into a contiguous
-    (nb * ps) buffer and the current chunk's K/V is overlaid at its
-    absolute offset with a single dynamic_update_slice (the buffer is
-    padded by C lanes so the last, partial chunk never clamps; the
-    overlaid padding rows land past ``n_valid`` where causal masking
-    hides them).  Attention then runs through ``flash_attention`` with
-    the chunk's absolute ``q_offset``.  Because the flash partition is
-    anchored at absolute position 0 and padded lanes are exact no-ops,
-    this is bit-identical to whole-prompt prefill attention for every
-    valid row — the serve engine's token-parity guarantee rests on it.
+    Per row, earlier chunks' context is gathered from pages into a
+    contiguous (nb * ps) buffer and the current chunk's K/V is overlaid
+    at the row's absolute offset (vmapped dynamic_update_slice — pure
+    data movement; the buffer is padded by C lanes so the last, partial
+    chunk never clamps; overlaid padding tokens land past ``n_valid``
+    where causal masking hides them).  Attention then runs through
+    ``flash_attention`` with per-row ``q_offset``.  Every op here is
+    row-independent (matmuls contract over feature dims, masks and the
+    softmax recurrence are per row), the flash partition stays anchored
+    at absolute position 0, and fully-masked lanes are exact no-ops —
+    so each row is bit-identical to whole-prompt prefill attention *and*
+    to the same chunk dispatched alone, whatever else shares the batch.
+    The serve engine's token-parity guarantee rests on both.
 
     Returns (out, k, v); *the caller owns page persistence* — one
     stacked scatter after the layer scan is far cheaper than per-layer
     scatters here (see DecoderLM.prefill_chunk_paged).
     """
     B, C, D = x.shape
-    assert B == 1, "chunked prefill ingests one request at a time"
     q, k, v = _project_qkv(p, x, cfg, positions)
-    kc = k_pages[table_row].reshape(1, -1, *k_pages.shape[2:])
-    vc = v_pages[table_row].reshape(1, -1, *v_pages.shape[2:])
+    kc = k_pages[table_rows].reshape(B, -1, *k_pages.shape[2:])
+    vc = v_pages[table_rows].reshape(B, -1, *v_pages.shape[2:])
     kc = jnp.pad(kc, ((0, 0), (0, C), (0, 0), (0, 0)))
     vc = jnp.pad(vc, ((0, 0), (0, C), (0, 0), (0, 0)))
-    kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, start, 0, 0))
-    vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, start, 0, 0))
+    overlay = jax.vmap(
+        lambda buf, new, s: lax.dynamic_update_slice(buf, new, (s, 0, 0)))
+    kc = overlay(kc, k.astype(kc.dtype), starts)
+    vc = overlay(vc, v.astype(vc.dtype), starts)
     out = flash_attention(q, kc, vc, causal=True,
-                          kv_chunk=cfg.attn_kv_chunk, q_offset=start)
-    out = _tp_gather_heads(out, tp_axis, axis=2)       # (1, C, H, Dh)
+                          kv_chunk=cfg.attn_kv_chunk, q_offset=starts)
+    out = _tp_gather_heads(out, tp_axis, axis=2)       # (B, C, H, Dh)
     out = out.reshape(B, C, -1)
     out = out @ p["wo"].astype(out.dtype)
     return out, k, v

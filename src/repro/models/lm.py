@@ -405,25 +405,31 @@ class DecoderLM:
             "lengths": ParamSpec((batch,), ("batch",), jnp.int32),
         }
 
-    def prefill_chunk_paged(self, params, state, tokens, table_row,
-                            start, n_valid, tp_axis=None):
-        """Ingest one prompt chunk of a single request into the paged
-        KV cache (chunked prefill).
+    def prefill_chunk_paged(self, params, state, tokens, table_rows,
+                            starts, n_valid, tp_axis=None):
+        """Ingest one prompt chunk each for up to B requests into the
+        paged KV cache (batched chunked prefill) in one dispatch.
 
-        ``tokens``: (1, C) — the next C prompt tokens at absolute
-        positions ``start + t``; rows t >= ``n_valid`` are padding
-        (their K/V writes land on the null page).  ``table_row``:
-        (nb,) int32 — the request's page table truncated to its
-        context bucket.  ``start`` / ``n_valid`` are traced scalars, so
-        one compile serves every chunk of every prompt in the bucket.
-        Returns (last-valid-token logits (1, V), new page state).
+        ``tokens``: (B, C) — row b holds its request's next C prompt
+        tokens at absolute positions ``starts[b] + t``; tokens with
+        t >= ``n_valid[b]`` are padding and rows with
+        ``n_valid[b] == 0`` are inactive (their K/V writes land on the
+        null page).  ``table_rows``: (B, nb) int32 — each request's
+        page table truncated to the dispatch's context bucket, null
+        beyond a row's own pages.  ``starts`` / ``n_valid``: (B,)
+        traced int32, so one compile serves every mix of chunks in the
+        bucket — which requests co-ingest can never change numerics.
+        Returns (per-row last-valid-token logits (B, V), new page
+        state); a row's logits are only meaningful on the chunk that
+        completes its prompt.
 
         Token-exactness: the flash partition is anchored at absolute
         position 0, the K/V gathered back from pages carry the same
         bf16 bits whole-prompt prefill would have produced (compute
-        dtype == page dtype), and every other op is per-token — so any
-        chunking of the prompt reproduces ``prefill``'s last-token
-        logits and cache bit-for-bit.
+        dtype == page dtype), and every other op is per-(row, token) —
+        so any chunking of a prompt, dispatched alone or co-batched,
+        reproduces ``prefill``'s last-token logits and cache
+        bit-for-bit (components.paged_chunk_attention_block).
 
         ``tp_axis``: mesh axis name when running as the per-shard body
         of a tensor-parallel ``shard_map`` program (serve/parallel.py;
@@ -434,7 +440,7 @@ class DecoderLM:
         assert not (tp_axis is not None and cfg.moe is not None)
         dtype = jnp.dtype(cfg.compute_dtype)
         n = tokens.shape[1]
-        positions = (start + jnp.arange(n, dtype=jnp.int32))[None]
+        positions = starts[:, None] + jnp.arange(n, dtype=jnp.int32)[None]
         x = self._embed_inputs(
             params, {"tokens": tokens, "positions": positions}, dtype)
         use_moe = cfg.moe is not None
@@ -443,9 +449,9 @@ class DecoderLM:
             lp, kp, vp = inp
             h = C.apply_norm(lp["ln1"], x, cfg.norm_kind, cfg.norm_eps)
             mix, k, v = C.paged_chunk_attention_block(
-                lp["mix"], h, cfg, positions=positions, start=start,
+                lp["mix"], h, cfg, positions=positions, starts=starts,
                 n_valid=n_valid, k_pages=kp, v_pages=vp,
-                table_row=table_row, tp_axis=tp_axis)
+                table_rows=table_rows, tp_axis=tp_axis)
             x = x + mix
             h2 = C.apply_norm(lp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
             if use_moe:
@@ -457,20 +463,26 @@ class DecoderLM:
         x, (ks, vs) = lax.scan(
             body, x, (params["layers"], state["k_pages"],
                       state["v_pages"]))
-        # persist the chunk's K/V for every layer in one stacked
-        # scatter (padding rows t >= n_valid are routed to null page 0)
+        # persist every row's chunk K/V for every layer in one stacked
+        # scatter (tokens t >= n_valid[b] are routed to null page 0;
+        # write-target pages are private per row — COW at admission —
+        # so co-ingested rows can never scatter into each other)
         ps_ = state["k_pages"].shape[2]
-        t = jnp.arange(n)
-        abs_pos = start + t
-        pid = jnp.where(t < n_valid, table_row[abs_pos // ps_], 0)
+        nb = table_rows.shape[1]
+        t = jnp.arange(n)[None]                        # (1, C)
+        abs_pos = starts[:, None] + t                  # (B, C)
+        idx = jnp.minimum(abs_pos // ps_, nb - 1)
+        pid = jnp.where(t < n_valid[:, None],
+                        jnp.take_along_axis(table_rows, idx, axis=1), 0)
         slot = abs_pos % ps_
         k_pages = state["k_pages"].at[:, pid, slot].set(
-            ks[:, 0].astype(state["k_pages"].dtype))
+            ks.astype(state["k_pages"].dtype))
         v_pages = state["v_pages"].at[:, pid, slot].set(
-            vs[:, 0].astype(state["v_pages"].dtype))
+            vs.astype(state["v_pages"].dtype))
         x = C.apply_norm(params["final_norm"], x, cfg.norm_kind,
                          cfg.norm_eps)
-        last = lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)
         logits = C.unembed(params["embed"], last, cfg)
         return logits[:, 0], {"k_pages": k_pages, "v_pages": v_pages}
 

@@ -17,7 +17,11 @@ serve stack's token-parity guarantee survives the mesh:
 * **What is replicated.**  Page tables, lengths, tokens, norms, the
   embedding/unembedding table, and the contraction-side projections
   wo / wd (w2).  Every shard therefore holds the *full* residual
-  stream and computes the (cheap) unembed redundantly.
+  stream and computes the (cheap) unembed redundantly.  The batched
+  chunked-prefill program's per-row inputs (table rows, starts, valid
+  counts) are control metadata like page tables and stay replicated
+  too — only its gathered K/V context and page writes are sharded (on
+  KVH, with the pages themselves).
 * **Why it is bitwise.**  No cross-shard *reduction* ever runs.  Each
   shard's ops are exactly the head/hidden slice of the single-device
   ops (XLA computes each output element's contraction identically
@@ -146,6 +150,10 @@ class TPServePrograms:
             make_paged_decode_step(self._local, tp_axis=SERVE_TP_AXIS),
             mesh=mesh, in_specs=(self._pspecs, full_state, P()),
             out_specs=(P(), full_state), check_vma=False))
+        # batched chunked prefill: (tokens, table_rows, starts,
+        # n_valid) are per-row control metadata — replicated, like the
+        # decode program's page tables; the heads of the gathered
+        # context and the page scatter shard with kv_state
         self.chunk = jax.jit(shard_map_compat(
             make_chunk_prefill_step(self._local, tp_axis=SERVE_TP_AXIS),
             mesh=mesh,

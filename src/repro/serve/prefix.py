@@ -77,6 +77,26 @@ class PrefixCache:
         self._clock = 0
         self.n_nodes = 0
 
+    @property
+    def min_partial_hit(self) -> int:
+        """Smallest partial-page overlap worth serving: a partial hit
+        forces a copy-on-write page copy at the attach site, so tiny
+        accidental overlaps between unrelated prompts cost more than
+        they save.  Single source of truth for ``_descend`` and for
+        predictors of future hits (``servable_after_insert``)."""
+        return max(1, self.ps // 2)
+
+    def servable_after_insert(self, lcp: int) -> int:
+        """Leading tokens a ``lookup`` could serve once a prompt whose
+        token-level common prefix with the queried one is ``lcp`` has
+        been inserted: full pages descend exactly, and the partial
+        remainder hits only at the ``min_partial_hit`` threshold.  The
+        scheduler's admission deferral (serve/scheduler.py
+        ``_defers_for_sharing``) uses this to predict whether waiting
+        for an in-flight prompt's registration buys anything."""
+        rem = lcp % self.ps
+        return lcp - rem + (rem if rem >= self.min_partial_hit else 0)
+
     # ---------------------------------------------------------- queries
     def _descend(self, toks) -> Tuple[List[Tuple["_Node", int]], int]:
         """Shared traversal behind ``lookup`` and ``probe``: the
@@ -102,7 +122,7 @@ class PrefixCache:
                 cp = _common_prefix(ch.key[:ch.n_tokens], rem)
                 if cp > best_cp:
                     best, best_cp = ch, cp
-            if best is not None and best_cp >= max(1, self.ps // 2):
+            if best is not None and best_cp >= self.min_partial_hit:
                 out.append((best, best_cp))
                 shared += best_cp
             break

@@ -12,15 +12,24 @@ ever-changing population of requests.  The request lifecycle is
 * **Admission** claims a batch slot and pages; a prompt prefix already
   resident in the cache's prefix trie is attached read-only
   (copy-on-write protects it) and skipped by prefill.
-* **Chunked prefill**: prompts ingest through a fixed-shape
-  masked-prefill program in ``chunk_size``-token chunks.  A prompt
-  longer than one chunk advances one chunk per engine step,
-  interleaved with the batched decode step — in-flight decode never
-  stalls for more than one chunk of prefill work — while short prompts
-  admit, ingest, and promote eagerly so the batch ramps at full speed.
-  The program's gathered context length is bucketed (``bucket_edges``,
-  in pages) so each bucket jit-compiles once instead of once per
-  distinct prompt length.
+* **Batched chunked prefill**: prompts ingest through a fixed-shape
+  ``(prefill_batch, chunk_size)`` masked-prefill program — up to
+  ``prefill_batch`` PREFILLING requests advance one chunk each *per
+  dispatch* (per-row page tables / starts / valid counts; inactive
+  rows routed to the null page), so a burst of short prompts pays one
+  program launch instead of one per prompt.  PREFILLING is a set
+  drained together, not a serialized queue; prompts longer than one
+  chunk advance one chunk per engine step, interleaved with the
+  batched decode step — in-flight decode never stalls for more than
+  one chunk of prefill work — while short prompts admit, ingest, and
+  promote eagerly so the batch ramps at full speed.  One admission
+  ordering rule survives from the serialized path: a prompt that could
+  share prefix pages with a prompt still mid-ingest waits for that
+  prompt's trie registration (``_defers_for_sharing``) — co-ingesting
+  it would silently forfeit the donation, and with it the in-burst
+  sharing the serialized path guaranteed.  The program's gathered
+  context length is bucketed (``bucket_edges``, in pages) so each
+  bucket jit-compiles once instead of once per distinct prompt length.
 * **Preemption**: when the allocator runs dry the engine first evicts
   LRU prefix-trie pages, then the youngest request — its pages are
   dropped and it re-queues for recompute-readmission (its own prompt
@@ -100,6 +109,7 @@ class ServeEngine:
                  max_pages_per_seq: Optional[int] = None,
                  eos_id: Optional[int] = None,
                  chunk_size: int = 32,
+                 prefill_batch: int = 1,
                  prefix_sharing: bool = True,
                  bucket_edges: Optional[Sequence[int]] = None,
                  spec_k: int = 0,
@@ -140,6 +150,11 @@ class ServeEngine:
         self.cache.v_pages = programs.prepare_pages(self.cache.v_pages)
         self.max_batch = max_batch
         self.chunk_size = chunk_size
+        # rows per chunked-prefill dispatch (the program's batch dim).
+        # 1 reproduces the PR 2 serialized path dispatch-for-dispatch;
+        # > 1 co-ingests a burst.  Token streams are bitwise identical
+        # either way (see _dispatch_prefill).
+        self.prefill_batch = max(1, min(int(prefill_batch), max_batch))
         if bucket_edges is None:
             bucket_edges = default_bucket_edges(max_pages_per_seq)
         self.bucket_edges = sorted(set(int(b) for b in bucket_edges))
@@ -165,7 +180,8 @@ class ServeEngine:
         self._admit_counter = 0
         self.finished: List[Request] = []
         self.n_decode_steps = 0
-        self.n_prefill_chunks = 0
+        self.n_prefill_chunks = 0        # per-row chunks ingested
+        self.n_prefill_dispatches = 0    # prefill program launches
         self.n_replay_steps = 0
         # speculation stats (accept rate = n_draft_accepted / n_drafted)
         self.n_spec_rounds = 0
@@ -237,17 +253,52 @@ class ServeEngine:
         self.waiting.appendleft(req)
         return slot
 
-    def _admit_one(self, now: float) -> bool:
-        if not self.waiting or self.waiting[0].arrival > now:
+    def _defers_for_sharing(self, req: Request) -> bool:
+        """True when ``req`` should wait for an in-flight prefill's trie
+        registration instead of co-ingesting beside it — the
+        admission-order prefix-registration invariant of the serialized
+        path: each prompt donates its pages before the next admission's
+        trie lookup, so a burst of same-system-prompt requests shares
+        all but the first.  Co-ingesting a would-be sharer forfeits
+        that donation.  Deferral holds only while the donor is
+        PREFILLING (promotion registers, preemption re-queues), so it
+        can never deadlock; and only when registration would serve
+        strictly more than the trie already can (a read-only probe —
+        observation must not protect pages from eviction)."""
+        trie = self.cache.prefix
+        if trie is None:
             return False
-        if self.prefilling:
-            # prefill is head-of-queue serialized (one chunk per step),
-            # so admitting behind an unfinished prompt would only pin
-            # pages early — and it would miss the prefix the current
-            # prompt is about to donate to the trie (a burst of
-            # same-system-prompt requests shares only if admission
-            # waits for the first one's registration)
-            return False
+        prompt = req.prompt
+        cap = len(prompt) - 1
+        resident = min(trie.probe(prompt), cap)
+        for other in self.prefilling.values():
+            o = other.prompt
+            m = min(len(prompt), len(o))
+            neq = np.nonzero(prompt[:m] != o[:m])[0]
+            lcp = int(neq[0]) if len(neq) else m
+            if min(trie.servable_after_insert(lcp), cap) > resident:
+                return True
+        return False
+
+    def _admit_burst(self, now: float) -> bool:
+        """Admit arrived requests (FIFO) until the PREFILLING set holds
+        ``prefill_batch`` rows, slots/pages run out, or the head of the
+        queue must wait for an in-flight prompt's prefix registration.
+        With ``prefill_batch == 1`` this degenerates to the serialized
+        path's gate: admit only when no prefill is in flight."""
+        admitted = False
+        while (len(self.prefilling) < self.prefill_batch
+               and self.waiting and self.waiting[0].arrival <= now):
+            if self.prefilling and self._defers_for_sharing(self.waiting[0]):
+                break
+            if not self._admit_one():
+                break
+            admitted = True
+        return admitted
+
+    def _admit_one(self) -> bool:
+        """Admit ``waiting[0]`` (caller checked arrival) into a free
+        slot; all-or-nothing on pages."""
         slot = self._free_slot_id()
         if slot is None:
             return False
@@ -282,48 +333,94 @@ class ServeEngine:
                 return e
         return self.bucket_edges[-1]
 
-    def _run_chunk(self, slot: int, req: Request, now: float) -> None:
-        """Ingest one prompt chunk for the head PREFILLING request; on
-        the chunk that completes the prompt, promote it to DECODING."""
-        start = req.prefill_pos
-        S = len(req.prompt)
-        valid = min(self.chunk_size, S - start)
-        nb = self._bucket_pages(self.cache.pages_for(start + valid))
-        tokens = np.zeros((1, self.chunk_size), np.int32)
-        tokens[0, :valid] = req.prompt[start:start + valid]
-        table_row = jax.numpy.asarray(
-            self.cache.page_tables[slot, :nb])
+    def _run_prefill(self, now: float) -> None:
+        """Advance every PREFILLING request one chunk in ONE program
+        dispatch — the drained-set replacement for the serialized
+        one-request chunk loop.  ``_admit_burst`` (the set's only
+        producer) caps it at ``prefill_batch`` rows, so the whole set
+        always fits one dispatch; dict insertion order is admission
+        order (re-admissions insert fresh)."""
+        self._dispatch_prefill(list(self.prefilling.items()), now)
+
+    def _dispatch_prefill(self, group, now: float) -> None:
+        """Ingest one chunk for each (slot, req) in ``group`` in ONE
+        batched program dispatch; promote rows whose chunk completes
+        their prompt.  Exactness: every program input row is exactly
+        what the serialized path would have dispatched alone — same
+        tokens, start, valid count, and page-table prefix (the shared
+        context bucket only pads the gathered buffer with fully-masked
+        lanes, exact no-ops) — and the program is row-independent, so
+        each request's stream is bitwise identical to serialized
+        ingestion regardless of co-tenants."""
+        Bp, Csz = self.prefill_batch, self.chunk_size
+        assert len(group) <= Bp, (len(group), Bp)
+        tokens = np.zeros((Bp, Csz), np.int32)
+        starts = np.zeros((Bp,), np.int32)
+        valids = np.zeros((Bp,), np.int32)
+        metas, buckets, nb = [], [], 1
+        for r, (slot, req) in enumerate(group):
+            start = req.prefill_pos
+            valid = min(Csz, len(req.prompt) - start)
+            tokens[r, :valid] = req.prompt[start:start + valid]
+            starts[r] = start
+            valids[r] = valid
+            own = self._bucket_pages(self.cache.pages_for(start + valid))
+            nb = max(nb, own)
+            buckets.append(own)
+            metas.append((r, slot, req, valid))
+        # inactive rows (group smaller than Bp) keep all-zero tables:
+        # their writes land on the null page
+        tables = np.zeros((Bp, nb), np.int32)
+        for (r, slot, req, valid), own in zip(metas, buckets):
+            tables[r, :own] = self.cache.page_tables[slot, :own]
         state = {"k_pages": self.cache.k_pages,
                  "v_pages": self.cache.v_pages}
         tok, state = self._chunk(self.params, state,
-                                 jax.numpy.asarray(tokens), table_row,
-                                 jax.numpy.asarray(start, np.int32),
-                                 jax.numpy.asarray(valid, np.int32))
+                                 jax.numpy.asarray(tokens),
+                                 jax.numpy.asarray(tables),
+                                 jax.numpy.asarray(starts),
+                                 jax.numpy.asarray(valids))
         self.cache.k_pages = state["k_pages"]
         self.cache.v_pages = state["v_pages"]
-        req.prefill_pos += valid
-        self.cache.lengths[slot] = req.prefill_pos
-        self.n_prefill_chunks += 1
-        if req.prefill_pos < S:
-            return
-        # prompt fully resident: donate it to the prefix trie, then
-        # promote (replaying any pre-preemption generation)
-        self.prefilling.pop(slot)
-        self.cache.register_prefix(slot, req.prompt)
-        self.active[slot] = req
-        if req.generated:
-            # recompute-readmission after preemption: replay the
-            # already-generated tokens through the *same* decode
-            # program, reproducing the original token stream exactly
-            # (re-prefilling prompt+generated instead would cross the
-            # prompt/generation numerics boundary of the oracle)
-            self._replay(slot, req.generated[:-1], now)
-        else:
-            req.generated.append(int(np.asarray(tok)[0, 0]))
-        if req.ttft is None:
-            req.ttft = now - req.arrival
-        if self._done(req):
-            self._finish(slot, now)
+        self.n_prefill_dispatches += 1
+        self.n_prefill_chunks += len(metas)
+        tok = np.asarray(tok)
+        # advance every row before any promotion: promotion may replay,
+        # replay may preempt — and preemption resets the victim's
+        # prefill_pos, which must already reflect this dispatch
+        for _, slot, req, valid in metas:
+            req.prefill_pos += valid
+            self.cache.lengths[slot] = req.prefill_pos
+        for r, slot, req, valid in metas:
+            if slot not in self.prefilling \
+                    or self.prefilling[slot] is not req:
+                continue                 # preempted by an earlier
+            if req.prefill_pos < len(req.prompt):
+                continue                 # row's replay making room
+            # prompt fully resident: donate it to the prefix trie, then
+            # promote (replaying any pre-preemption generation).
+            # Registration runs in admission order, and co-ingested
+            # rows were admitted precisely because none could use
+            # another's donation (_defers_for_sharing), so the
+            # serialized path's registration-before-next-admission
+            # sharing guarantee carries over.
+            self.prefilling.pop(slot)
+            self.cache.register_prefix(slot, req.prompt)
+            self.active[slot] = req
+            if req.generated:
+                # recompute-readmission after preemption: replay the
+                # already-generated tokens through the *same* decode
+                # program, reproducing the original token stream
+                # exactly (re-prefilling prompt+generated instead would
+                # cross the prompt/generation numerics boundary of the
+                # oracle)
+                self._replay(slot, req.generated[:-1], now)
+            else:
+                req.generated.append(int(tok[r, 0]))
+            if req.ttft is None:
+                req.ttft = now - req.arrival
+            if self._done(req):
+                self._finish(slot, now)
 
     def _replay(self, slot: int, tokens, now: float) -> None:
         """Write ``tokens`` into ``slot``'s pages via single-slot decode
@@ -470,23 +567,25 @@ class ServeEngine:
 
     # ------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:
-        """One engine iteration: admit what fits, ingest one prompt
-        chunk for the head prefilling request, then one batched decode
-        step over every decoding slot.  Returns True while any work
-        remains (queued or in flight)."""
-        # Admission + prefill.  Chunk pacing exists to stop a LONG
-        # prompt from stalling in-flight decode, so only a mid-prompt
-        # chunk yields the step: short prompts (<= chunk_size) admit,
+        """One engine iteration: admit what fits (up to
+        ``prefill_batch`` co-ingesting prompts), advance every
+        prefilling request one chunk in batched dispatches, then one
+        batched decode step over every decoding slot.  Returns True
+        while any work remains (queued or in flight)."""
+        # Admission + prefill.  Chunk pacing exists to stop LONG
+        # prompts from stalling in-flight decode, so only mid-prompt
+        # chunks yield the step: short prompts (<= chunk_size) admit,
         # ingest, and promote eagerly — the batch ramps as fast as
-        # one-shot prefill — and each registers its prefix before the
-        # next admission, so same-step bursts still share.  With no
+        # one-shot prefill — and a prompt that could share a prefix
+        # with one still ingesting waits for its registration
+        # (_defers_for_sharing), so bursts still share.  With no
         # decoders to protect, long prompts ingest back-to-back too.
         while True:
-            if not self.prefilling and not self._admit_one(now):
+            self._admit_burst(now)
+            if not self.prefilling:
                 break
-            slot, req = next(iter(self.prefilling.items()))
-            self._run_chunk(slot, req, now)
-            if slot in self.prefilling and self.active:
+            self._run_prefill(now)
+            if self.prefilling and self.active:
                 break                          # mid-prompt pacing point
         if not self.active:
             return bool(self.waiting or self.prefilling)
@@ -520,6 +619,30 @@ class ServeEngine:
             if self._done(req):
                 self._finish(slot, now)
         return bool(self.active or self.prefilling or self.waiting)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, float]:
+        """Cumulative engine counters: dispatch counts (the
+        machine-independent face of every serving optimization —
+        wall-clock on shared runners is noise, program launches are
+        not), prefill co-ingestion occupancy, and cache reuse.
+        ``prefill_rows_mean`` is the mean number of requests sharing a
+        prefill dispatch (1.0 == the serialized path)."""
+        return {
+            "n_decode_steps": self.n_decode_steps,
+            "n_prefill_chunks": self.n_prefill_chunks,
+            "n_prefill_dispatches": self.n_prefill_dispatches,
+            "prefill_rows_mean": (
+                self.n_prefill_chunks
+                / max(self.n_prefill_dispatches, 1)),
+            "n_replay_steps": self.n_replay_steps,
+            "n_spec_rounds": self.n_spec_rounds,
+            "n_drafted": self.n_drafted,
+            "n_draft_accepted": self.n_draft_accepted,
+            "n_shared_tokens": self.cache.n_shared_tokens,
+            "n_cow": self.cache.n_cow,
+            "n_prefix_evictions": self.cache.n_prefix_evictions,
+        }
 
     # -------------------------------------------------------------- run
     def run(self, requests: List[Request], *,

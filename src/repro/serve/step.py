@@ -9,8 +9,10 @@ Four program flavors:
 * ``make_paged_decode_step`` — per-request positions against a paged KV
   cache (serve/kv_cache.py); one jit'd program serves every mix of
   requests because the batch/page shapes are fixed.
-* ``make_chunk_prefill_step`` — masked single-request prompt ingestion
-  (chunked prefill); context length bucketed by the scheduler.
+* ``make_chunk_prefill_step`` — batched masked prompt ingestion
+  (chunked prefill): one chunk each for up to B_pf co-ingesting
+  requests per dispatch, inactive rows routed to the null page;
+  context length bucketed by the scheduler.
 * ``make_verify_step`` — score T = k+1 tokens per request in one pass
   (speculative decode); T = 1 is bit-for-bit one paged decode step.
 
@@ -94,14 +96,17 @@ def make_verify_step(model, sample: str = "greedy",
 
 def make_chunk_prefill_step(model, sample: str = "greedy",
                             tp_axis: Optional[str] = None) -> Callable:
-    """Chunked-prefill step: ingest up to C prompt tokens of one
-    request into the paged cache and return (greedy next token (1, 1),
-    new page state).  The token is only meaningful on the chunk that
-    completes the prompt (it is the request's first generated token);
-    earlier chunks' logits are discarded by the engine."""
-    def chunk_step(params, state, tokens, table_row, start, n_valid):
+    """Batched chunked-prefill step: ingest up to C prompt tokens each
+    for up to B_pf requests into the paged cache in ONE dispatch and
+    return (greedy next tokens (B_pf, 1), new page state).  Rows with
+    ``n_valid[b] == 0`` are inactive (null-page routed); a row's token
+    is only meaningful on the chunk that completes its prompt (it is
+    that request's first generated token); other rows' logits are
+    discarded by the engine.  Which requests share a dispatch can
+    never change a row's numerics (models/lm.prefill_chunk_paged)."""
+    def chunk_step(params, state, tokens, table_rows, starts, n_valid):
         logits, state = model.prefill_chunk_paged(
-            params, state, tokens, table_row, start, n_valid,
+            params, state, tokens, table_rows, starts, n_valid,
             tp_axis=tp_axis)
         if sample == "greedy":
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)

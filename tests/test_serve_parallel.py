@@ -72,6 +72,53 @@ def test_tp2_token_parity_sharing_and_spec():
     """))
 
 
+def test_tp2_batched_prefill_parity():
+    """Batched chunked prefill (prefill_batch > 1) composed with
+    tensor parallelism: a tp=2 engine co-ingesting a burst must stream
+    bit-identically to the single-device *serialized* engine — the
+    per-row tables/starts/valids are replicated control metadata, the
+    gathered context and page scatter shard on KV heads."""
+    print(run_devices(8, """
+        import jax, numpy as np
+        from repro import configs
+        from repro.models import build_model
+        from repro.serve import Request, ServeEngine
+
+        cfg = configs.get_smoke("qwen3-0.6b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(13)
+        prefix = rng.integers(0, cfg.vocab_size, size=(20,)).astype(np.int32)
+        prompts = [np.concatenate([prefix,
+                                   rng.integers(0, cfg.vocab_size,
+                                                size=(7,)).astype(np.int32)])
+                   for _ in range(3)]
+        # ragged unshared prompts straddling chunk boundaries ride along
+        prompts += [rng.integers(0, cfg.vocab_size,
+                                 size=(L,)).astype(np.int32)
+                    for L in (15, 33)]
+
+        def trace():
+            return [Request(rid=i, prompt=p, max_new_tokens=6)
+                    for i, p in enumerate(prompts)]
+
+        kw = dict(max_batch=4, n_pages=64, page_size=8,
+                  max_pages_per_seq=8, chunk_size=16)
+        ref = ServeEngine(model, params, prefill_batch=1, **kw)
+        want = {r.rid: list(r.generated) for r in ref.run(trace())}
+        tp = ServeEngine(model, params, tp=2, prefill_batch=4, **kw)
+        got = {r.rid: list(r.generated) for r in tp.run(trace())}
+        assert want == got, (want, got)
+        assert tp.n_prefill_dispatches < tp.n_prefill_chunks, \\
+            "burst was meant to co-ingest"
+        assert tp.cache.n_shared_tokens >= 2 * 20, \\
+            "in-burst sharing must fire under tp too"
+        tp.cache.check_invariants()
+        print("tp2 batched-prefill parity ok",
+              tp.n_prefill_dispatches, tp.n_prefill_chunks)
+    """))
+
+
 def test_tp2_preemption_replay_parity():
     """Page pressure forces eviction + recompute-replay on the sharded
     engine; the replayed stream still matches the single-device one."""

@@ -1,0 +1,181 @@
+"""Batched chunked prefill: up to ``prefill_batch`` PREFILLING requests
+ingest one prompt chunk each per program dispatch, with token streams
+bitwise identical to the serialized one-request-per-dispatch path and
+to the sequential ``greedy_generate`` oracle — across burst admission,
+ragged prompts straddling chunk boundaries, preemption mid-prefill,
+in-burst prefix sharing (the admission-order registration invariant),
+and speculative decode downstream."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import Request, ServeEngine, greedy_generate
+
+
+@pytest.fixture(scope="module")
+def qwen3():
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def oracle_streams(model, params, prompts, gen):
+    return {
+        i: np.asarray(greedy_generate(model, params, {"tokens": p[None]},
+                                      gen, cache_len=len(p) + gen))[0]
+        for i, p in enumerate(prompts)}
+
+
+def run_engine(model, params, prompts, gen, **kw):
+    eng = ServeEngine(model, params, **kw)
+    done = eng.run([Request(rid=i, prompt=p, max_new_tokens=gen)
+                    for i, p in enumerate(prompts)])
+    assert len(done) == len(prompts)
+    eng.cache.check_invariants()
+    return eng, {r.rid: np.asarray(r.generated, np.int32) for r in done}
+
+
+def test_burst_admission_coingests_and_matches_oracle(qwen3):
+    """A burst of short prompts shares prefill dispatches (the tentpole
+    perf property) and every stream still matches the sequential
+    oracle bit for bit."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(7)
+    lens, gen = [9, 17, 24, 12, 31, 8], 8
+    prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
+               for L in lens]
+    want = oracle_streams(model, params, prompts, gen)
+    kw = dict(max_batch=4, n_pages=40, page_size=8, max_pages_per_seq=8,
+              chunk_size=16)
+    serial, got_s = run_engine(model, params, prompts, gen,
+                               prefill_batch=1, **kw)
+    batched, got_b = run_engine(model, params, prompts, gen,
+                                prefill_batch=4, **kw)
+    for i in want:
+        np.testing.assert_array_equal(got_s[i], want[i])
+        np.testing.assert_array_equal(got_b[i], want[i])
+    # same chunks, fewer program launches; the serialized arm is 1:1
+    assert serial.n_prefill_dispatches == serial.n_prefill_chunks
+    assert batched.n_prefill_chunks == serial.n_prefill_chunks
+    assert batched.n_prefill_dispatches < serial.n_prefill_dispatches
+    assert batched.stats()["prefill_rows_mean"] > 1.0
+
+
+def test_ragged_lengths_straddle_chunk_boundaries(qwen3):
+    """Prompt lengths on, one past, and one short of chunk multiples —
+    per-row (start, valid) bookkeeping must stay exact when rows of
+    different depths share a dispatch."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(13)
+    lens, gen, chunk = [15, 16, 17, 32, 33, 31], 6, 16
+    prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
+               for L in lens]
+    want = oracle_streams(model, params, prompts, gen)
+    _, got = run_engine(model, params, prompts, gen, prefill_batch=6,
+                        max_batch=6, n_pages=56, page_size=8,
+                        max_pages_per_seq=8, chunk_size=chunk)
+    for i in want:
+        np.testing.assert_array_equal(got[i], want[i],
+                                      err_msg=f"request {i} diverged")
+
+
+def test_preempt_mid_prefill_and_replay_parity(qwen3):
+    """Page pressure preempts co-ingesting requests mid-flight; the
+    recompute-readmission replay still reproduces the oracle."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(11)
+    lens, gen = [30, 28, 18], 8
+    prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
+               for L in lens]
+    want = oracle_streams(model, params, prompts, gen)
+    eng, got = run_engine(model, params, prompts, gen, prefill_batch=3,
+                          max_batch=3, n_pages=13, page_size=8,
+                          max_pages_per_seq=8, prefix_sharing=False)
+    assert eng.n_replay_steps >= 1, \
+        "trace was sized to force preemption + replay"
+    for i in want:
+        np.testing.assert_array_equal(got[i], want[i])
+
+
+def test_prefix_sharing_fires_inside_coingested_burst(qwen3):
+    """The admission-order registration invariant survives batching:
+    the first of a same-prefix burst ingests alone (the others defer
+    until it donates to the trie), so in-burst sharing still fires —
+    and the COW forks keep every stream exact."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, size=(20,)).astype(np.int32)
+    gen = 6
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size,
+                                            size=(7,)).astype(np.int32)])
+               for _ in range(4)]
+    want = oracle_streams(model, params, prompts, gen)
+    eng, got = run_engine(model, params, prompts, gen, prefill_batch=4,
+                          max_batch=4, n_pages=48, page_size=8,
+                          max_pages_per_seq=8, chunk_size=16)
+    # requests 1..3 each reuse the 20-token prefix from request 0's
+    # registration; co-ingesting them alongside it would have found an
+    # empty trie
+    assert eng.cache.n_shared_tokens >= 3 * 20
+    assert eng.cache.n_cow >= 3
+    # sharers co-ingested with each other after deferring: strictly
+    # fewer launches than the serialized path's one-per-chunk
+    assert eng.n_prefill_dispatches < eng.n_prefill_chunks
+    for i in want:
+        np.testing.assert_array_equal(got[i], want[i],
+                                      err_msg=f"request {i} diverged")
+
+
+def test_unrelated_burst_does_not_defer(qwen3):
+    """Deferral is only for would-be sharers: distinct prompts co-admit
+    immediately even with sharing enabled (a probe of the cold trie
+    plus pairwise LCPs below the half-page threshold)."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(17,)).astype(np.int32)
+               for _ in range(4)]
+    eng, _ = run_engine(model, params, prompts, 4, prefill_batch=4,
+                        max_batch=4, n_pages=40, page_size=8,
+                        max_pages_per_seq=8, chunk_size=16)
+    # 4 requests x 2 chunks each, one co-ingested group per wave
+    assert eng.stats()["prefill_rows_mean"] >= 2.0
+
+
+def test_spec_decode_downstream_of_batched_prefill(qwen3):
+    """Speculation composes: VERIFYING rounds over slots promoted out
+    of one co-ingested burst keep the spec-off streams bit for bit."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, size=(20,)).astype(np.int32)
+    gen = 8
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size,
+                                            size=(7,)).astype(np.int32)])
+               for _ in range(4)]
+    want = oracle_streams(model, params, prompts, gen)
+    eng, got = run_engine(model, params, prompts, gen, prefill_batch=4,
+                          spec_k=4, max_batch=4, n_pages=48, page_size=8,
+                          max_pages_per_seq=8, chunk_size=16)
+    assert eng.n_spec_rounds >= 1
+    for i in want:
+        np.testing.assert_array_equal(got[i], want[i])
+
+
+def test_prefill_batch_one_is_the_serialized_path(qwen3):
+    """``prefill_batch=1`` (the default) keeps the PR 2 dispatch
+    accounting: one request per dispatch, admission gated on an empty
+    prefill set."""
+    cfg, model, params = qwen3
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
+               for L in (24, 9)]
+    eng, _ = run_engine(model, params, prompts, 4, max_batch=2,
+                        n_pages=24, page_size=8, max_pages_per_seq=8,
+                        chunk_size=16)
+    assert eng.prefill_batch == 1
+    assert eng.n_prefill_dispatches == eng.n_prefill_chunks == 3
+    assert eng.stats()["prefill_rows_mean"] == 1.0
