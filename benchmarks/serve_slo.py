@@ -1,0 +1,289 @@
+"""SLO-aware streaming front-end: interactive latency under batch
+saturation, weighted tenant fairness, and a chaos leg (bursty arrivals
++ mid-stream cancels) with bitwise stream parity.
+
+All three legs run the deterministic front-end clock (one unit per
+pump), so every latency is measured in *backend steps* — the
+dispatch-count framing the serving benchmarks gate on (wall clock on a
+shared 2-core runner swings 3-5x run to run; scheduling decisions do
+not).  Parity against the sequential ``greedy_generate`` oracle is
+asserted on every leg: SLO preemption, fair queueing, and cancellation
+are scheduling policy only, and must never change a token.
+
+* ``slo_ttft_ok`` — with every slot saturated by batch-class work,
+  interactive p99 TTFT (steps) <= 0.5x the slo-blind baseline (same
+  trace, ``slo_aware=False``).  Priority dispatch + batch preemption
+  is what buys this; exact replay is why it costs no correctness.
+* ``tenant_share_ok`` — two tenants with weight 3:1 and identical
+  saturating backlogs: dispatch share over the contended window within
+  20% of the weight split (stride-scheduled WFQ).
+* ``chaos_ok`` — bursty arrivals across tenants/classes with
+  mid-stream cancels: zero dropped streams (every stream finishes or
+  was cancelled), zero non-parity streams (finished == oracle,
+  cancelled == oracle prefix), and cancel-then-resubmit reuses the
+  cancelled request's trie pages (shared tokens strictly grow).
+
+    PYTHONPATH=src python -m benchmarks.serve_slo [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import (ServeFrontend, ServeOptions, TenantPolicy,
+                         greedy_generate)
+from repro.serve.step import ServePrograms
+
+from .common import fmt_table, save
+
+ARCH = "qwen3-0.6b"
+PAGE, CHUNK = 8, 16
+
+
+class _DispatchRecorder:
+    """Transparent ServeBackend wrapper that records dispatch order
+    (the front-end's policy output) for the fairness gate."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.order = []
+
+    def submit(self, req):
+        self.order.append(req.tenant)
+        self._inner.submit(req)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def _oracle(model, params, prompts, gen):
+    return [[int(t) for t in np.asarray(
+        greedy_generate(model, params, {"tokens": p[None]}, gen,
+                        cache_len=len(p) + gen))[0]]
+            for p in prompts]
+
+
+def _opts(batch, **kw):
+    return ServeOptions(batch=batch, page_size=PAGE, chunk_size=CHUNK,
+                        **kw)
+
+
+def _prompts(cfg, n, plen, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+            for _ in range(n)]
+
+
+class _Sized:
+    """Minimal request stand-in for ServeOptions.sized_for (it only
+    reads ``prompt`` and ``max_new_tokens``), sized generously so one
+    pool shape serves every leg (one jit specialization)."""
+
+    def __init__(self, prompt, gen):
+        self.prompt = prompt
+        self.max_new_tokens = 4 * gen
+
+
+# ------------------------------------------------------------ leg 1: SLO
+def _slo_leg(model, params, cfg, programs, *, n_batch, n_inter, gen):
+    """Saturate a batch-4 backend with batch-class work, then drip
+    interactive arrivals; measure their TTFT in steps with and without
+    SLO awareness on the identical trace."""
+    prompts = _prompts(cfg, 6, 16, seed=1)
+    want = _oracle(model, params, prompts, gen)
+    out = {}
+    for aware in (True, False):
+        fe = ServeFrontend(
+            _opts(4).sized_for([_Sized(prompts[0], gen)]).build(
+                model, params, programs=programs),
+            slo_aware=aware)
+        streams = []
+        for i in range(n_batch):
+            streams.append((fe.submit(prompts[i % len(prompts)], gen),
+                            i % len(prompts)))
+        submitted = 0
+        pumps = 0
+        while fe.busy or submitted < n_inter:
+            pumps += 1
+            if pumps % 4 == 0 and submitted < n_inter:
+                streams.append(
+                    (fe.submit(prompts[submitted % len(prompts)], gen,
+                               slo_class="interactive"),
+                     submitted % len(prompts)))
+                submitted += 1
+            fe.pump()
+        parity = all(list(s) == want[w] for s, w in streams)
+        ttfts = [r.ttft for r in fe.completed
+                 if r.slo_class == "interactive"]
+        out[aware] = {
+            "parity": parity,
+            "ttft_p99": float(np.percentile(ttfts, 99)),
+            "ttft_mean": float(np.mean(ttfts)),
+            "preemptions": fe.stats()["n_slo_preemptions"],
+        }
+    return out
+
+
+# ------------------------------------------------------ leg 2: fairness
+def _fairness_leg(model, params, cfg, programs, *, per_tenant, gen):
+    """Identical saturating backlogs from gold (weight 3) and free
+    (weight 1); the dispatch share over the first contended window
+    must track the weights."""
+    prompts = _prompts(cfg, 4, 16, seed=2)
+    want = _oracle(model, params, prompts, gen)
+    rec = _DispatchRecorder(
+        _opts(2).sized_for([_Sized(prompts[0], gen)]).build(
+            model, params, programs=programs))
+    fe = ServeFrontend(rec, tenants={"gold": TenantPolicy(weight=3.0),
+                                     "free": TenantPolicy(weight=1.0)})
+    streams = []
+    for i in range(per_tenant):
+        for tenant in ("gold", "free"):
+            streams.append((fe.submit(prompts[i % len(prompts)], gen,
+                                      tenant=tenant),
+                            i % len(prompts)))
+    fe.drain()
+    parity = all(list(s) == want[w] for s, w in streams)
+    # the contended window: both tenants backlogged for the first
+    # 2*per_tenant - |weight mismatch| dispatches; measure the first
+    # 2/3 of all dispatches to stay safely inside it
+    window = rec.order[:max(4, (4 * per_tenant) // 3)]
+    gold_share = window.count("gold") / len(window)
+    return {"parity": parity, "gold_share": gold_share,
+            "window": len(window),
+            "tokens": {t: fe.stats().get(f"tenant_tokens[{t}]", 0.0)
+                       for t in ("gold", "free")}}
+
+
+# --------------------------------------------------------- leg 3: chaos
+def _chaos_leg(model, params, cfg, programs, *, n_req, gen):
+    """Bursty multi-tenant arrivals with mid-stream cancels; every
+    surviving stream must be bitwise-exact, every cancelled stream an
+    exact oracle prefix, and resubmitted prompts must re-share trie
+    pages."""
+    rng = np.random.default_rng(3)
+    prompts = _prompts(cfg, n_req, 16, seed=3)
+    want = _oracle(model, params, prompts, gen)
+    eng = _opts(3, spec_k=3).sized_for(
+        [_Sized(prompts[0], gen)]).build(model, params,
+                                         programs=programs)
+    fe = ServeFrontend(eng, tenants={"a": TenantPolicy(weight=2.0),
+                                     "b": TenantPolicy(weight=1.0)})
+    pending = list(range(n_req))
+    live = {}                       # idx -> (stream, collected tokens)
+    done = {}
+    cancelled = {}
+    cancel_budget = max(2, n_req // 4)
+    while pending or fe.busy:
+        # bursty arrivals: 0-3 submissions per scheduling tick
+        for _ in range(int(rng.integers(0, 4))):
+            if not pending:
+                break
+            i = pending.pop(0)
+            s = fe.submit(prompts[i], gen,
+                          tenant="a" if i % 3 else "b",
+                          slo_class="interactive" if i % 5 == 0
+                          else "batch")
+            live[i] = (s, [])
+        fe.pump()
+        for i, (s, buf) in list(live.items()):
+            while s._pending:               # drain without blocking
+                buf.append(next(iter(s)))
+            if s.finished and not s._pending:
+                done[i] = buf
+                del live[i]
+        # occasionally hang up on a stream that has produced tokens
+        if cancel_budget and rng.random() < 0.3:
+            victims = [i for i, (s, buf) in live.items() if buf]
+            if victims:
+                i = victims[int(rng.integers(len(victims)))]
+                s, buf = live.pop(i)
+                s.cancel()
+                cancelled[i] = buf
+                cancel_budget -= 1
+    no_drops = (len(done) + len(cancelled) == n_req
+                and not fe.stats()["n_queued"]
+                and not fe.stats()["n_inflight"])
+    parity = all(toks == want[i] for i, toks in done.items())
+    prefix_ok = all(toks == want[i][:len(toks)]
+                    for i, toks in cancelled.items())
+    # cancel-then-resubmit: the trie still holds the cancelled
+    # prompts' pages, so the reruns share instead of recomputing
+    shared0 = eng.cache.n_shared_tokens
+    redo_ok = True
+    for i in cancelled:
+        s = fe.submit(prompts[i], gen)
+        redo_ok = redo_ok and list(s) == want[i]
+    trie_reuse = eng.cache.n_shared_tokens > shared0 if cancelled \
+        else True
+    return {"no_drops": no_drops, "parity": parity,
+            "prefix_ok": prefix_ok, "redo_ok": redo_ok,
+            "trie_reuse": trie_reuse, "n_cancelled": len(cancelled),
+            "n_done": len(done)}
+
+
+def run(smoke: bool = False) -> dict:
+    n_batch, n_inter, gen = (8, 4, 8) if smoke else (12, 6, 12)
+    per_tenant = 6 if smoke else 10
+    n_chaos = 8 if smoke else 14
+    cfg = configs.get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    programs = ServePrograms(model)     # one compile cache, all legs
+
+    slo = _slo_leg(model, params, cfg, programs,
+                   n_batch=n_batch, n_inter=n_inter, gen=gen)
+    fair = _fairness_leg(model, params, cfg, programs,
+                         per_tenant=per_tenant, gen=gen)
+    chaos = _chaos_leg(model, params, cfg, programs,
+                       n_req=n_chaos, gen=gen)
+
+    ttft_ratio = slo[True]["ttft_p99"] / max(slo[False]["ttft_p99"],
+                                             1e-9)
+    gold_want = 3.0 / 4.0
+    share_err = abs(fair["gold_share"] - gold_want) / gold_want
+    gates = {
+        "slo_parity_ok": slo[True]["parity"] and slo[False]["parity"],
+        "slo_ttft_ok": ttft_ratio <= 0.5,
+        "tenant_share_ok": fair["parity"] and share_err <= 0.2,
+        "chaos_ok": all(chaos[k] for k in
+                        ("no_drops", "parity", "prefix_ok", "redo_ok",
+                         "trie_reuse")),
+    }
+    rows = [
+        {"leg": "slo-aware", "ttft_p99_steps": f"{slo[True]['ttft_p99']:.1f}",
+         "detail": f"{int(slo[True]['preemptions'])} preemptions"},
+        {"leg": "slo-blind", "ttft_p99_steps": f"{slo[False]['ttft_p99']:.1f}",
+         "detail": f"ratio {ttft_ratio:.2f} (gate <= 0.5)"},
+        {"leg": "fairness", "ttft_p99_steps": "-",
+         "detail": f"gold share {fair['gold_share']:.2f} "
+                   f"(want {gold_want:.2f} +/- 20%)"},
+        {"leg": "chaos", "ttft_p99_steps": "-",
+         "detail": f"{chaos['n_done']} done, "
+                   f"{chaos['n_cancelled']} cancelled, parity "
+                   f"{chaos['parity'] and chaos['prefix_ok']}"},
+    ]
+    print(fmt_table(rows, ["leg", "ttft_p99_steps", "detail"]))
+    for g, ok in gates.items():
+        print(f"{g}: {'PASS' if ok else 'FAIL'}")
+    out = {
+        **gates,
+        "ttft_p99_slo_steps": slo[True]["ttft_p99"],
+        "ttft_p99_base_steps": slo[False]["ttft_p99"],
+        "ttft_ratio": ttft_ratio,
+        "slo_preemptions": slo[True]["preemptions"],
+        "gold_share": fair["gold_share"],
+        "chaos_cancelled": float(chaos["n_cancelled"]),
+    }
+    save("serve_slo", {"smoke": smoke, "slo": {str(k): v for k, v in
+                                               slo.items()},
+                       "fairness": fair, "chaos": chaos, "gates": gates})
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv[1:])

@@ -1,4 +1,4 @@
-"""Serving example, four tiers:
+"""Serving example, five tiers:
 
 1. Continuous-batching engine (paged KV cache, chunked prefill) on the
    dense-GQA arch: staggered request lengths, mid-flight admission,
@@ -10,7 +10,11 @@
    prefix-affinity router — two shared-prompt workloads are
    partitioned so each replica's prefix trie serves one of them
    (token streams identical to any single engine's).
-4. Lockstep greedy loop across the other cache families (ring-buffer
+4. Streaming front-end: submit at any time, iterate confirmed tokens
+   per request, cancel one stream mid-flight — an interactive-class
+   request preempts saturated batch work and still every stream is
+   token-exact.
+5. Lockstep greedy loop across the other cache families (ring-buffer
    local attention, recurrent state) — fixed-size states don't page.
 
     PYTHONPATH=src python examples/serve_batched.py
@@ -124,6 +128,39 @@ def router_demo():
           f"hits, prefix tokens reused per replica {shared}")
 
 
+def stream_demo():
+    """The async front-end over the same engine: per-request token
+    streams, a mid-stream cancel, and an interactive request that
+    preempts a full batch of batch-class work."""
+    from repro.serve import ServeFrontend, ServeOptions
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=(24,)).astype(np.int32)
+               for _ in range(4)]
+    opts = ServeOptions(batch=2, page_size=8, chunk_size=16, n_pages=64)
+    fe = opts.build_frontend(model, params)
+    t0 = time.time()
+    batch_streams = [fe.submit(p, 12) for p in prompts[:3]]
+    for _ in range(4):                  # saturate both slots
+        fe.pump()
+    hangup = batch_streams[2]
+    hangup.cancel()
+    hi = fe.submit(prompts[3], 6, slo_class="interactive")
+    hi_toks = list(hi)                  # iteration pumps the backend
+    for s in batch_streams[:2]:
+        for _ in s:                     # drain the batch streams
+            pass
+    dt = time.time() - t0
+    st = fe.stats()
+    print(f"qwen3-0.6b[stream]     {int(st['n_completed'])} streams + "
+          f"1 cancelled -> {dt * 1e3:6.0f} ms; interactive got "
+          f"{len(hi_toks)} tok via {int(st['n_slo_preemptions'])} "
+          f"preemption(s), ids={hi_toks}")
+
+
 def lockstep_demo():
     for name in LOCKSTEP_ARCHS:
         cfg = configs.get_smoke(name)
@@ -152,6 +189,7 @@ def main():
     engine_demo()
     prefix_demo()
     router_demo()
+    stream_demo()
     lockstep_demo()
 
 

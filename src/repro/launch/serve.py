@@ -1,5 +1,6 @@
 """Serving launcher: continuous-batching engine over the paged KV
-cache (default), or the naive lockstep loop (--naive) for comparison.
+cache (default), the async streaming front-end (--stream), or the
+naive lockstep loop (--naive) for comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 16 --batch 8 --prompt-len 64 --gen 32 --rate 50
@@ -8,13 +9,18 @@ Distributed serving: ``--tp N`` shards every engine over an N-device
 mesh (CPU dev: XLA_FLAGS=--xla_force_host_platform_device_count=N);
 ``--replicas M`` puts M engine replicas behind the request router
 (``--router-policy prefix|least-loaded|round-robin``).  The two
-compose.  Engine knobs (chunk size, page size, context buckets, prefix
-sharing) are documented in docs/serving.md.
+compose.  ``--stream`` serves the same trace through ``ServeFrontend``
+instead: per-request token streams, SLO classes (every 4th request is
+interactive), and ``--tenant-weights`` fair sharing.  Engine knobs
+(chunk size, page size, context buckets, prefix sharing) are
+consolidated in ``repro.serve.ServeOptions`` and documented in
+docs/serving.md.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -22,7 +28,7 @@ import numpy as np
 from repro import configs
 from repro.data.pipeline import SyntheticPipeline
 from repro.models import build_model
-from repro.serve import Request, RequestRouter, ServeEngine, ServePrograms
+from repro.serve import Request, RequestRouter, ServeOptions
 from repro.serve.kv_cache import pages_needed
 from repro.serve.step import make_decode_step, make_prefill_step
 
@@ -54,42 +60,18 @@ def synth_requests(cfg, n: int, prompt_len: int, gen: int,
     return reqs
 
 
-def run_engine(model, params, reqs, *, batch, page_size, n_pages,
-               realtime, chunk_size=32, prefill_batch=1,
-               prefix_sharing=True,
-               bucket_edges=None, spec_k=0, drafter_factory=None,
-               tp=1, replicas=1, router_policy="prefix"):
-    """Serve ``reqs`` on ``replicas`` engine replicas (each of
-    ``n_pages`` pages, sharded ``tp``-way when tp > 1) and return
-    aggregate stats.  One ``ServePrograms`` bundle is shared by every
-    replica — one compile cache regardless of fleet size."""
-    if tp > 1:
-        from repro.serve.parallel import TPServePrograms
-        programs = TPServePrograms(model, tp=tp)
-    else:
-        programs = ServePrograms(model)
-    mpps = max(pages_needed(len(r.prompt) + r.max_new_tokens, page_size)
-               for r in reqs)
+def serve_trace(opts: ServeOptions, model, params, reqs, *,
+                realtime: bool = True, smoke: bool = False):
+    """Serve ``reqs`` on the backend ``opts`` describes and return the
+    aggregate stats dict the CLI prints (throughput, TTFT, dispatch
+    and cache-reuse counters)."""
+    return _drive(opts.build(model, params, smoke=smoke), reqs,
+                  realtime=realtime)
 
-    def mk():
-        return ServeEngine(model, params, max_batch=batch,
-                           n_pages=n_pages, page_size=page_size,
-                           max_pages_per_seq=mpps,
-                           chunk_size=chunk_size,
-                           prefill_batch=prefill_batch,
-                           prefix_sharing=prefix_sharing,
-                           bucket_edges=bucket_edges, spec_k=spec_k,
-                           drafter=(drafter_factory() if drafter_factory
-                                    else None),
-                           programs=programs)
 
-    if replicas > 1:
-        front = RequestRouter([mk() for _ in range(replicas)],
-                              policy=router_policy)
-        engines = front.replicas
-    else:
-        front = mk()
-        engines = [front]
+def _drive(front, reqs, *, realtime: bool):
+    engines = front.replicas if isinstance(front, RequestRouter) \
+        else [front]
     t0 = time.perf_counter()
     done = front.run(reqs, realtime=realtime)
     dt = time.perf_counter() - t0
@@ -115,10 +97,84 @@ def run_engine(model, params, reqs, *, batch, page_size, n_pages,
             "draft_accepted": sum(e.n_draft_accepted for e in engines),
             "accept_rate": sum(e.n_draft_accepted for e in engines)
             / max(drafted, 1),
-            "dispatched": (front.n_dispatched if replicas > 1
+            "dispatched": (front.n_dispatched
+                           if isinstance(front, RequestRouter)
                            else [len(done)]),
-            "affinity_hits": (front.n_affinity_hits if replicas > 1
+            "affinity_hits": (front.n_affinity_hits
+                              if isinstance(front, RequestRouter)
                               else 0)}
+
+
+def run_engine(model, params, reqs, *, batch, page_size, n_pages,
+               realtime, chunk_size=32, prefill_batch=1,
+               prefix_sharing=True,
+               bucket_edges=None, spec_k=0, drafter_factory=None,
+               tp=1, replicas=1, router_policy="prefix"):
+    """Deprecated: build a ``repro.serve.ServeOptions`` and call
+    ``serve_trace`` (or ``opts.build(...).run(...)``) instead.  Kept
+    for one release as a kwargs-compatible shim."""
+    warnings.warn("run_engine is deprecated; use ServeOptions + "
+                  "serve_trace", DeprecationWarning, stacklevel=2)
+    opts = ServeOptions(batch=batch, page_size=page_size,
+                        n_pages=n_pages, chunk_size=chunk_size,
+                        prefill_batch=prefill_batch,
+                        prefix_sharing=prefix_sharing,
+                        bucket_edges=bucket_edges, spec_k=spec_k,
+                        tp=tp, replicas=replicas,
+                        router_policy=router_policy)
+    front = opts.sized_for(reqs).build(model, params)
+    if drafter_factory is not None and spec_k:
+        # the shim predates ServeOptions.draft_config: splice the
+        # caller's factory into the already-built backend
+        engines = front.replicas if isinstance(front, RequestRouter) \
+            else [front]
+        for e in engines:
+            e.drafter = drafter_factory()
+    return _drive(front, reqs, realtime=realtime)
+
+
+def run_stream(opts: ServeOptions, model, params, reqs, *,
+               smoke: bool = False):
+    """Serve the trace through the async front-end: submit each
+    request when its arrival time comes due (wall clock), pump until
+    every stream completes, and report per-SLO-class TTFT plus the
+    per-tenant token split.  Every 4th request is interactive; tenants
+    rotate round-robin through ``--tenant-weights`` names."""
+    fe = opts.build_frontend(model, params, smoke=smoke, realtime=True)
+    tenants = list(opts.tenant_weights) or ["default"]
+    pending = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+    streams = {}
+    t0 = time.perf_counter()
+    while pending or fe.busy:
+        now = time.perf_counter() - t0
+        while pending and pending[0].arrival <= now:
+            r = pending.pop(0)
+            r.tenant = tenants[r.rid % len(tenants)]
+            r.slo_class = "interactive" if r.rid % 4 == 0 else "batch"
+            streams[r.rid] = fe.submit_request(r)
+        if not fe.pump() and pending:
+            time.sleep(max(0.0, pending[0].arrival
+                           - (time.perf_counter() - t0)))
+    dt = time.perf_counter() - t0
+    done = fe.completed
+    toks = sum(len(r.generated) for r in done)
+    print(f"stream: {len(done)} streams, {toks} tokens in {dt:.2f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s)")
+    for cls in ("interactive", "batch"):
+        ts = [r.ttft for r in done
+              if r.slo_class == cls and r.ttft is not None]
+        if ts:
+            print(f"  {cls:<12} n={len(ts):<3} "
+                  f"TTFT mean {np.mean(ts) * 1e3:.0f} ms "
+                  f"p99 {np.percentile(ts, 99) * 1e3:.0f} ms")
+    st = fe.stats()
+    shares = {t: st[f"tenant_tokens[{t}]"] for t in tenants
+              if f"tenant_tokens[{t}]" in st}
+    if len(shares) > 1:
+        print("  tenant tokens: "
+              + ", ".join(f"{t}={int(v)}" for t, v in shares.items()))
+    print(f"  {int(st['n_slo_preemptions'])} SLO preemptions, "
+          f"{int(st['n_cancelled'])} cancelled")
 
 
 def run_naive(model, params, cfg, args):
@@ -153,7 +209,6 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--naive", action="store_true",
                     help="lockstep greedy loop instead of the engine")
-    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every "
@@ -162,48 +217,11 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=50.0,
                     help="Poisson arrival rate (req/s)")
-    ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--n-pages", type=int, default=0,
-                    help="0 -> sized to the trace")
-    ap.add_argument("--chunk-size", type=int, default=32,
-                    help="prompt tokens ingested per engine step")
-    ap.add_argument("--prefill-batch", type=int, default=0,
-                    help="requests co-ingesting one prompt chunk each "
-                         "per prefill dispatch (0 -> --batch; 1 -> "
-                         "serialized PR 2 path; tokens are unchanged, "
-                         "only dispatch count)")
     ap.add_argument("--stats", action="store_true",
                     help="dump per-engine counter stats (dispatches, "
                          "co-ingestion occupancy, cache reuse) after "
                          "the run")
-    ap.add_argument("--no-prefix-sharing", action="store_true",
-                    help="disable the prefix cache (recompute every "
-                         "prompt from scratch)")
-    ap.add_argument("--bucket-edges", type=str, default="",
-                    help="comma-separated context buckets in pages "
-                         "(default: doubling)")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="draft tokens verified per engine step "
-                         "(speculative decode; tokens are unchanged, "
-                         "only faster)")
-    ap.add_argument("--no-spec", action="store_true",
-                    help="disable speculative decode (one token per "
-                         "decode step)")
-    ap.add_argument("--draft-config", type=str, default="",
-                    help="arch id of a draft model for speculation "
-                         "(default: model-free n-gram prompt lookup); "
-                         "resolved at the same --smoke size as --arch")
-    ap.add_argument("--tp", type=int, default=1,
-                    help="tensor-parallel degree: shard each engine's "
-                         "attention heads, FFN and paged KV cache over "
-                         "a tp-device mesh (token streams unchanged)")
-    ap.add_argument("--replicas", type=int, default=1,
-                    help="engine replicas behind the request router "
-                         "(each gets its own --n-pages pool)")
-    ap.add_argument("--router-policy", type=str, default="prefix",
-                    choices=["prefix", "least-loaded", "round-robin"],
-                    help="replica selection: prefix affinity (default),"
-                         " least outstanding tokens, or round-robin")
+    ServeOptions.add_cli(ap)
     args = ap.parse_args()
 
     cfg = (configs.get_smoke if args.smoke else configs.get)(args.arch)
@@ -216,47 +234,28 @@ def main():
 
     reqs = synth_requests(cfg, args.requests, args.prompt_len, args.gen,
                           args.rate, prefix_len=args.shared_prefix)
-    total = args.shared_prefix + args.prompt_len + args.gen
-    per_seq = pages_needed(total, args.page_size) + 1
-    n_pages = args.n_pages or (1 + args.batch * per_seq
-                               + pages_needed(max(args.shared_prefix, 1),
-                                              args.page_size))
-    edges = ([int(e) for e in args.bucket_edges.split(",")]
-             if args.bucket_edges else None)
-    spec_k = 0 if args.no_spec else args.spec_k
-    drafter_factory = None
-    if spec_k and args.draft_config:
-        from repro.serve import DraftModelDrafter
-        dcfg = (configs.get_smoke if args.smoke
-                else configs.get)(args.draft_config)
-        dmodel = build_model(dcfg)
-        dparams = dmodel.init(jax.random.PRNGKey(1))
+    opts = ServeOptions.from_args(args).sized_for(
+        reqs, shared_prefix=args.shared_prefix)
 
-        # one drafter per replica: drafter state is keyed by batch slot
-        def drafter_factory():
-            return DraftModelDrafter(dmodel, dparams, cfg_target=cfg)
-    stats = run_engine(model, params, reqs, batch=args.batch,
-                       page_size=args.page_size, n_pages=n_pages,
-                       realtime=True, chunk_size=args.chunk_size,
-                       prefill_batch=args.prefill_batch or args.batch,
-                       prefix_sharing=not args.no_prefix_sharing,
-                       bucket_edges=edges, spec_k=spec_k,
-                       drafter_factory=drafter_factory,
-                       tp=args.tp, replicas=args.replicas,
-                       router_policy=args.router_policy)
+    if args.stream:
+        run_stream(opts, model, params, reqs, smoke=args.smoke)
+        return
+
+    stats = serve_trace(opts, model, params, reqs, realtime=True,
+                        smoke=args.smoke)
     spec_note = (f"{stats['spec_rounds']} verify rounds, "
                  f"accept rate {stats['accept_rate']:.2f} "
                  f"({stats['draft_accepted']}/{stats['drafted']} drafts), "
-                 if spec_k else "")
+                 if opts.spec_k else "")
     dist_note = ""
-    if args.tp > 1 or args.replicas > 1:
-        dist_note = (f"tp={args.tp} x {args.replicas} replica(s) "
-                     f"[{args.router_policy}] "
+    if opts.tp > 1 or opts.replicas > 1:
+        dist_note = (f"tp={opts.tp} x {opts.replicas} replica(s) "
+                     f"[{opts.router_policy}] "
                      f"dispatched {stats['dispatched']}, "
                      f"{stats['affinity_hits']} affinity hits, ")
     print(f"{args.requests} requests ({args.shared_prefix}+"
           f"{args.prompt_len}+{args.gen} tok) "
-          f"batch={args.batch} pages={n_pages}x{args.page_size}: "
+          f"batch={opts.batch} pages={opts.n_pages}x{opts.page_size}: "
           f"{stats['tok_per_s']:.1f} tok/s, "
           f"TTFT {stats['ttft_mean_s'] * 1e3:.0f} ms, "
           f"{dist_note}"

@@ -1,7 +1,12 @@
+from .backend import ServeBackend, StreamEvent  # noqa: F401
+from .frontend import ServeFrontend, TenantPolicy, TokenStream  # noqa: F401
 from .kv_cache import PagedKVCache  # noqa: F401
+from .options import ServeOptions  # noqa: F401
 from .prefix import PrefixCache  # noqa: F401
 from .router import RequestRouter  # noqa: F401
-from .scheduler import Request, ServeEngine, default_bucket_edges  # noqa: F401,E501
+from .scheduler import (  # noqa: F401
+    SLO_CLASSES, Request, ServeEngine, default_bucket_edges,
+)
 from .spec import DraftModelDrafter, PromptLookupDrafter  # noqa: F401
 from .step import (  # noqa: F401
     ServePrograms, greedy_generate, make_chunk_prefill_step,

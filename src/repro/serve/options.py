@@ -1,0 +1,231 @@
+"""One construction surface for the serve stack: ``ServeOptions``.
+
+The serve CLI grew ~15 loose flags across five PRs, and every layer
+(engine, router, front-end, benchmarks) re-threaded the same kwargs.
+``ServeOptions`` is the single source of truth: the CLI registers its
+flags through ``add_cli`` (spellings unchanged), parses them back with
+``from_args``, and ``build``/``build_frontend`` construct the whole
+backend stack — engine(s), tensor-parallel program bundle, router,
+drafters, streaming front-end — from one value.  Programmatic callers
+construct it directly and skip argparse entirely:
+
+    opts = ServeOptions(batch=8, spec_k=4, replicas=2)
+    backend = opts.sized_for(reqs).build(model, params)
+
+Knob semantics are documented in docs/serving.md; this module only
+owns how they compose into objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .kv_cache import pages_needed
+from .router import ROUTER_POLICIES, RequestRouter
+from .scheduler import ServeEngine
+
+__all__ = ["ServeOptions"]
+
+
+def _parse_weights(spec: str) -> Dict[str, float]:
+    """``"a=3,b=1"`` -> ``{"a": 3.0, "b": 1.0}`` (empty -> {})."""
+    out: Dict[str, float] = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        name, _, w = part.partition("=")
+        out[name] = float(w) if w else 1.0
+    return out
+
+
+@dataclasses.dataclass
+class ServeOptions:
+    # engine
+    batch: int = 4
+    page_size: int = 16
+    n_pages: int = 0                 # 0 -> size to the trace (sized_for)
+    chunk_size: int = 32
+    prefill_batch: int = 0           # 0 -> batch
+    prefix_sharing: bool = True
+    bucket_edges: Optional[List[int]] = None
+    spec_k: int = 4
+    draft_config: str = ""
+    max_pages_per_seq: Optional[int] = None
+    eos_id: Optional[int] = None
+    # fleet
+    tp: int = 1
+    replicas: int = 1
+    router_policy: str = "prefix"
+    # front-end
+    stream: bool = False
+    tenant_weights: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    # ------------------------------------------------------------- CLI
+    @staticmethod
+    def add_cli(ap) -> None:
+        """Register the serve-stack flags (same spellings the CLI has
+        always used) on an argparse parser."""
+        ap.add_argument("--batch", type=int, default=4)
+        ap.add_argument("--page-size", type=int, default=16)
+        ap.add_argument("--n-pages", type=int, default=0,
+                        help="0 -> sized to the trace")
+        ap.add_argument("--chunk-size", type=int, default=32,
+                        help="prompt tokens ingested per engine step")
+        ap.add_argument("--prefill-batch", type=int, default=0,
+                        help="requests co-ingesting one prompt chunk "
+                             "each per prefill dispatch (0 -> --batch; "
+                             "1 -> serialized PR 2 path; tokens are "
+                             "unchanged, only dispatch count)")
+        ap.add_argument("--no-prefix-sharing", action="store_true",
+                        help="disable the prefix cache (recompute every "
+                             "prompt from scratch)")
+        ap.add_argument("--bucket-edges", type=str, default="",
+                        help="comma-separated context buckets in pages "
+                             "(default: doubling)")
+        ap.add_argument("--spec-k", type=int, default=4,
+                        help="draft tokens verified per engine step "
+                             "(speculative decode; tokens are "
+                             "unchanged, only faster)")
+        ap.add_argument("--no-spec", action="store_true",
+                        help="disable speculative decode (one token per "
+                             "decode step)")
+        ap.add_argument("--draft-config", type=str, default="",
+                        help="arch id of a draft model for speculation "
+                             "(default: model-free n-gram prompt "
+                             "lookup); resolved at the same --smoke "
+                             "size as --arch")
+        ap.add_argument("--tp", type=int, default=1,
+                        help="tensor-parallel degree: shard each "
+                             "engine's attention heads, FFN and paged "
+                             "KV cache over a tp-device mesh (token "
+                             "streams unchanged)")
+        ap.add_argument("--replicas", type=int, default=1,
+                        help="engine replicas behind the request router "
+                             "(each gets its own --n-pages pool)")
+        ap.add_argument("--router-policy", type=str, default="prefix",
+                        choices=list(ROUTER_POLICIES),
+                        help="replica selection: prefix affinity "
+                             "(default), least outstanding tokens, or "
+                             "round-robin")
+        ap.add_argument("--stream", action="store_true",
+                        help="serve through the async streaming "
+                             "front-end (per-request token streams, "
+                             "SLO classes, tenant fairness) instead of "
+                             "the offline batch driver")
+        ap.add_argument("--tenant-weights", type=str, default="",
+                        help="comma-separated tenant=weight pairs for "
+                             "the --stream front-end (e.g. "
+                             "'interactive=3,bulk=1'); requests are "
+                             "assigned round-robin across the named "
+                             "tenants")
+
+    @classmethod
+    def from_args(cls, args) -> "ServeOptions":
+        """Build from a parsed argparse namespace (``add_cli`` flags)."""
+        edges = ([int(e) for e in args.bucket_edges.split(",")]
+                 if args.bucket_edges else None)
+        return cls(
+            batch=args.batch,
+            page_size=args.page_size,
+            n_pages=args.n_pages,
+            chunk_size=args.chunk_size,
+            prefill_batch=args.prefill_batch,
+            prefix_sharing=not args.no_prefix_sharing,
+            bucket_edges=edges,
+            spec_k=0 if args.no_spec else args.spec_k,
+            draft_config=args.draft_config,
+            tp=args.tp,
+            replicas=args.replicas,
+            router_policy=args.router_policy,
+            stream=getattr(args, "stream", False),
+            tenant_weights=_parse_weights(
+                getattr(args, "tenant_weights", "")),
+        )
+
+    # ------------------------------------------------------ construction
+    def sized_for(self, reqs: Sequence, *,
+                  shared_prefix: int = 0) -> "ServeOptions":
+        """Resolve ``n_pages == 0`` / ``max_pages_per_seq == None``
+        from a request trace: per-replica pool = one null page + a
+        (pages + headroom) budget per batch slot + the shared prefix's
+        pages once.  Explicit values pass through unchanged."""
+        need = [pages_needed(len(r.prompt) + r.max_new_tokens,
+                             self.page_size) for r in reqs]
+        mpps = self.max_pages_per_seq or max(need)
+        n_pages = self.n_pages or (
+            1 + self.batch * (max(need) + 1)
+            + pages_needed(max(shared_prefix, 1), self.page_size))
+        return dataclasses.replace(self, n_pages=n_pages,
+                                   max_pages_per_seq=mpps)
+
+    def make_drafter_factory(self, cfg_target, *, smoke: bool = False):
+        """Per-replica drafter constructor for ``draft_config`` (None
+        when the default n-gram prompt-lookup drafter applies).
+        Drafter state is keyed by batch slot, so replicas must not
+        share one instance."""
+        if not (self.spec_k and self.draft_config):
+            return None
+        import jax
+
+        from repro import configs
+        from repro.models import build_model
+
+        dcfg = (configs.get_smoke if smoke
+                else configs.get)(self.draft_config)
+        dmodel = build_model(dcfg)
+        dparams = dmodel.init(jax.random.PRNGKey(1))
+
+        def factory():
+            from .spec import DraftModelDrafter
+            return DraftModelDrafter(dmodel, dparams,
+                                     cfg_target=cfg_target)
+        return factory
+
+    def build(self, model, params, *, smoke: bool = False,
+              programs=None):
+        """Construct the backend this options value describes: one
+        ``ServeEngine`` (tensor-parallel when ``tp > 1``) or a
+        ``RequestRouter`` over ``replicas`` engines.  All replicas
+        share ONE program bundle (one compile cache regardless of
+        fleet size)."""
+        if self.n_pages <= 0:
+            raise ValueError("n_pages unresolved: pass it explicitly or "
+                             "call sized_for(reqs) first")
+        if programs is None:
+            if self.tp > 1:
+                from .parallel import TPServePrograms
+                programs = TPServePrograms(model, tp=self.tp)
+            else:
+                from .step import ServePrograms
+                programs = ServePrograms(model)
+        drafter_factory = self.make_drafter_factory(model.cfg,
+                                                    smoke=smoke)
+
+        def mk():
+            return ServeEngine(
+                model, params, max_batch=self.batch,
+                n_pages=self.n_pages, page_size=self.page_size,
+                max_pages_per_seq=self.max_pages_per_seq,
+                eos_id=self.eos_id, chunk_size=self.chunk_size,
+                prefill_batch=self.prefill_batch or self.batch,
+                prefix_sharing=self.prefix_sharing,
+                bucket_edges=self.bucket_edges, spec_k=self.spec_k,
+                drafter=(drafter_factory() if drafter_factory
+                         else None),
+                programs=programs)
+
+        if self.replicas > 1:
+            return RequestRouter([mk() for _ in range(self.replicas)],
+                                 policy=self.router_policy)
+        return mk()
+
+    def build_frontend(self, model, params, *, smoke: bool = False,
+                       programs=None, slo_aware: bool = True,
+                       realtime: bool = False):
+        """Streaming front-end over the built backend, with
+        ``tenant_weights`` materialized as tenant policies."""
+        from .frontend import ServeFrontend, TenantPolicy
+        tenants = {name: TenantPolicy(weight=w)
+                   for name, w in self.tenant_weights.items()} or None
+        return ServeFrontend(
+            self.build(model, params, smoke=smoke, programs=programs),
+            tenants=tenants, slo_aware=slo_aware, realtime=realtime)

@@ -43,6 +43,11 @@ working set fits again (benchmarks/serve_router.py measures exactly
 this regime).  Token streams are unchanged by construction: every
 replica is a token-exact engine and routing only chooses *where* a
 stream is produced.
+
+The router implements the same ``ServeBackend`` protocol as a single
+engine (serve/backend.py): submit/step/run/stats plus the streaming
+face (``drain_events``) and mid-stream removal (``extract``/
+``cancel``) — a front-end cannot tell one replica from a fleet.
 """
 from __future__ import annotations
 
@@ -50,6 +55,7 @@ import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .backend import StreamEvent
 from .scheduler import Request, ServeEngine
 
 __all__ = ["RequestRouter", "ROUTER_POLICIES"]
@@ -85,23 +91,65 @@ class RequestRouter:
         self.n_affinity_hits = 0         # dispatches with affinity > 0
 
     # ---------------------------------------------------------- frontend
-    def submit(self, req: Request) -> None:
-        """Queue a request; fails fast (ValueError) if NO replica could
-        ever admit it.  Heterogeneous fleets are fine — dispatch only
-        considers replicas that can take the request."""
+    def check_admissible(self, req: Request) -> None:
+        """Raise ValueError if NO replica could ever admit ``req``.
+        Heterogeneous fleets are fine — dispatch only considers
+        replicas that can take the request."""
         err = None
         for eng in self.replicas:
             try:
                 eng.check_admissible(req)
-                self.queue.append(req)
                 return
             except ValueError as e:
                 err = e
         raise err
 
+    def submit(self, req: Request) -> None:
+        """Queue a request (see ``check_admissible`` for rejection)."""
+        self.check_admissible(req)
+        self.queue.append(req)
+
     @property
     def n_inflight(self) -> int:
         return len(self.queue) + sum(e.n_inflight for e in self.replicas)
+
+    @property
+    def capacity(self) -> int:
+        """Aggregate concurrently-servable requests: the sum of the
+        replicas' batch slots (per-replica ``max_inflight`` only pads
+        each replica's internal queue beyond this)."""
+        return sum(e.max_batch for e in self.replicas)
+
+    def drain_events(self) -> List[StreamEvent]:
+        """Confirmed-token events since the last drain, replica-major.
+        Per-stream order is exact (a request lives on one replica);
+        cross-stream interleaving is already only step-granular on a
+        single engine, so replica-major order changes nothing a
+        streaming consumer can observe."""
+        ev: List[StreamEvent] = []
+        for eng in self.replicas:
+            ev.extend(eng.drain_events())
+        return ev
+
+    def extract(self, rid: int) -> Optional[Request]:
+        """Remove the request wherever it lives — router queue or any
+        replica — freeing backend resources; confirmed tokens survive
+        and re-submission resumes the stream exactly (the replay
+        machinery makes resumption replica-portable)."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[i]
+                return r
+        for eng in self.replicas:
+            req = eng.extract(rid)
+            if req is not None:
+                return req
+        return None
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a request mid-stream (extract-and-discard); True if the
+        rid was live anywhere in the fleet."""
+        return self.extract(rid) is not None
 
     # --------------------------------------------------------- affinity
     def _page_keys(self, prompt) -> List[Tuple[int, ...]]:
@@ -189,6 +237,23 @@ class RequestRouter:
                 eng.step(now)
                 busy = True
         return busy or bool(self.queue)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, float]:
+        """Field-wise sum of every replica's engine counters plus the
+        router's own: reads identically to ``ServeEngine.stats`` (the
+        ``ServeBackend`` contract), with fleet-level extras."""
+        agg: Dict[str, float] = {}
+        for eng in self.replicas:
+            for k, v in eng.stats().items():
+                agg[k] = agg.get(k, 0) + v
+        # ratio fields don't sum — recompute from the summed counters
+        agg["prefill_rows_mean"] = (agg["n_prefill_chunks"]
+                                    / max(agg["n_prefill_dispatches"], 1))
+        agg["n_replicas"] = len(self.replicas)
+        agg["n_routed"] = sum(self.n_dispatched)
+        agg["n_affinity_hits"] = self.n_affinity_hits
+        return agg
 
     # -------------------------------------------------------------- run
     def run(self, requests: List[Request], *,

@@ -55,6 +55,12 @@ Every step keeps the token-parity guarantee: generated streams are
 bit-identical to the sequential ``greedy_generate`` oracle, with or
 without speculation (see docs/serving.md and docs/speculative.md for
 what would break it).
+
+The engine is one implementation of the ``ServeBackend`` protocol
+(serve/backend.py); the multi-replica router is the other.  Streaming
+callers consume per-step confirmed-token events (``drain_events``) and
+may ``extract``/``cancel`` a request mid-stream — both ride the
+preempt/free machinery above, so they compose with everything else.
 """
 from __future__ import annotations
 
@@ -66,11 +72,14 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from .backend import StreamEvent
 from .kv_cache import PagedKVCache
 from .spec import PromptLookupDrafter
 from .step import ServePrograms
 
-__all__ = ["Request", "ServeEngine", "default_bucket_edges"]
+__all__ = ["Request", "ServeEngine", "SLO_CLASSES", "default_bucket_edges"]
+
+SLO_CLASSES = ("interactive", "batch")
 
 
 def default_bucket_edges(max_pages_per_seq: int) -> List[int]:
@@ -90,6 +99,11 @@ class Request:
     prompt: np.ndarray                    # (S,) int32
     max_new_tokens: int
     arrival: float = 0.0
+    # multi-tenant front-end metadata (serve/frontend.py); the engine
+    # itself is policy-free and never reads these — defaults keep every
+    # pre-front-end call site constructing unchanged
+    tenant: str = "default"
+    slo_class: str = "batch"              # "interactive" | "batch"
     # engine-filled
     generated: List[int] = dataclasses.field(default_factory=list)
     ttft: Optional[float] = None          # first token latency (s)
@@ -176,6 +190,10 @@ class ServeEngine:
         self.waiting: deque[Request] = deque()
         self.prefilling: "OrderedDict[int, Request]" = OrderedDict()
         self.active: Dict[int, Request] = {}      # slot -> DECODING req
+        # confirmed-token events since the last drain (streaming face;
+        # see backend.StreamEvent).  run() clears them — the batch
+        # driver's callers read finished Requests instead.
+        self.events: deque[StreamEvent] = deque()
         self._admit_seq: Dict[int, int] = {}      # slot -> admission order
         self._admit_counter = 0
         self.finished: List[Request] = []
@@ -216,6 +234,52 @@ class ServeEngine:
     def n_inflight(self) -> int:
         return len(self.waiting) + len(self.prefilling) + len(self.active)
 
+    @property
+    def capacity(self) -> int:
+        """Requests this backend can serve concurrently (batch slots).
+        A front-end that keeps ``n_inflight < capacity`` retains all
+        queueing policy itself."""
+        return self.max_batch
+
+    def drain_events(self) -> List[StreamEvent]:
+        """Return (and clear) the confirmed-token events accumulated
+        since the last drain, in confirmation order."""
+        ev = list(self.events)
+        self.events.clear()
+        return ev
+
+    def _emit(self, req: Request, tokens) -> None:
+        if tokens or req.finished:
+            self.events.append(StreamEvent(req.rid, tuple(tokens),
+                                           req.finished))
+
+    def extract(self, rid: int) -> Optional[Request]:
+        """Remove the request wherever it lives — queued, prefilling or
+        decoding — freeing its slot and pages through the same path
+        preemption uses, and return it with confirmed tokens intact.
+        Re-submitting the returned request later resumes its stream
+        token-exactly (recompute-replay), so a front-end can preempt a
+        batch-class request for an interactive one without correctness
+        risk.  Returns None if the rid is not here (finished requests
+        are not extractable — their stream is complete)."""
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                del self.waiting[i]
+                return r
+        for slot, r in list(self.prefilling.items()) \
+                + list(self.active.items()):
+            if r.rid == rid:
+                return self._evict_slot(slot)
+        return None
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a request mid-stream: extract-and-discard.  Pages the
+        request privately held return to the free list; pages its
+        prompt donated to the prefix trie stay resident (a
+        cancel-then-resubmit re-shares them).  Tokens already streamed
+        were confirmed and stay valid.  True if the rid was live."""
+        return self.extract(rid) is not None
+
     # --------------------------------------------------------- internals
     def _free_slot_id(self) -> Optional[int]:
         for s in range(self.max_batch):
@@ -232,6 +296,21 @@ class ServeEngine:
         req.finish_time = now
         self.finished.append(req)
 
+    def _evict_slot(self, slot: int) -> Request:
+        """Release ``slot`` (prefilling or decoding): drop its page
+        references, detach drafter state, reset ingestion progress.
+        The request's confirmed tokens survive — re-admission replays
+        them, reproducing the stream exactly.  Shared by preemption,
+        ``extract`` and ``cancel``."""
+        req = (self.prefilling.pop(slot, None)
+               or self.active.pop(slot, None))
+        self._admit_seq.pop(slot)
+        self.cache.free_slot(slot)
+        if self.drafter is not None:
+            self.drafter.detach(slot)       # draft state is disposable
+        req.prefill_pos = 0
+        return req
+
     def _preempt_youngest(self, now: float,
                           exclude: Optional[int] = None) -> Optional[int]:
         """Evict the most recently admitted request (prefilling or
@@ -242,14 +321,8 @@ class ServeEngine:
         if not candidates:
             return None
         slot = max(candidates, key=self._admit_seq.get)
-        req = (self.prefilling.pop(slot, None)
-               or self.active.pop(slot, None))
-        self._admit_seq.pop(slot)
-        self.cache.free_slot(slot)
-        if self.drafter is not None:
-            self.drafter.detach(slot)       # draft state is disposable
+        req = self._evict_slot(slot)
         req.n_preemptions += 1
-        req.prefill_pos = 0
         self.waiting.appendleft(req)
         return slot
 
@@ -407,6 +480,7 @@ class ServeEngine:
             self.prefilling.pop(slot)
             self.cache.register_prefix(slot, req.prompt)
             self.active[slot] = req
+            first_token = not req.generated
             if req.generated:
                 # recompute-readmission after preemption: replay the
                 # already-generated tokens through the *same* decode
@@ -421,6 +495,9 @@ class ServeEngine:
                 req.ttft = now - req.arrival
             if self._done(req):
                 self._finish(slot, now)
+            # replay re-derives KV for tokens streamed before a
+            # preemption; only a fresh first token is a new confirmation
+            self._emit(req, req.generated[-1:] if first_token else [])
 
     def _replay(self, slot: int, tokens, now: float) -> None:
         """Write ``tokens`` into ``slot``'s pages via single-slot decode
@@ -564,6 +641,8 @@ class ServeEngine:
             self.cache.rollback_spec(slot)
             if self._done(req):
                 self._finish(slot, now)
+            # confirmed in one burst: the streaming face of speculation
+            self._emit(req, appended)
 
     # ------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:
@@ -618,6 +697,7 @@ class ServeEngine:
             self.cache.lengths[slot] += 1
             if self._done(req):
                 self._finish(slot, now)
+            self._emit(req, req.generated[-1:])
         return bool(self.active or self.prefilling or self.waiting)
 
     # ------------------------------------------------------------ stats
@@ -665,4 +745,7 @@ class ServeEngine:
                 time.sleep(max(0.0,
                                self.waiting[0].arrival
                                - (time.perf_counter() - t0)))
+        # the batch surface reports via finished Requests; stream
+        # events are for step-driven front-ends (drain_events)
+        self.events.clear()
         return self.finished[first:]

@@ -1,0 +1,189 @@
+"""ServeBackend protocol: engine/router conformance, drop-in
+interchangeability, per-step confirmed-token events, Request
+backward-compat, and the ServeOptions construction surface."""
+import argparse
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import (
+    Request, RequestRouter, ServeBackend, ServeEngine, ServeOptions,
+    StreamEvent, greedy_generate,
+)
+
+
+@pytest.fixture(scope="module")
+def qwen3():
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n=6, plen=20, gen=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, plen,
+                                        dtype=np.int32),
+                    max_new_tokens=gen) for i in range(n)]
+
+
+def _oracle(model, params, reqs):
+    out = {}
+    for r in reqs:
+        p = np.asarray(r.prompt)
+        toks = greedy_generate(model, params, {"tokens": p[None]},
+                               r.max_new_tokens,
+                               cache_len=len(p) + r.max_new_tokens)
+        out[r.rid] = [int(t) for t in np.asarray(toks)[0]]
+    return out
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("n_pages", 48)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("chunk_size", 16)
+    return ServeEngine(model, params, **kw)
+
+
+# ------------------------------------------------------------- protocol
+def test_engine_and_router_satisfy_protocol(qwen3):
+    _, model, params = qwen3
+    eng = _engine(model, params)
+    router = RequestRouter([_engine(model, params)])
+    for backend in (eng, router):
+        assert isinstance(backend, ServeBackend)
+
+
+def test_request_backward_compat():
+    """Pre-frontend construction sites (rid/prompt/max_new_tokens,
+    optional arrival) must keep working, with neutral defaults for the
+    new multi-tenant fields."""
+    r = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                max_new_tokens=8)
+    assert (r.tenant, r.slo_class, r.arrival) == ("default", "batch", 0.0)
+    r2 = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                 max_new_tokens=8, arrival=2.5)
+    assert r2.arrival == 2.5 and r2.tenant == "default"
+
+
+def test_engine_router_interchangeable(qwen3):
+    """A single-replica router is a drop-in for the engine: identical
+    token streams and the same core stats counters from run()."""
+    cfg, model, params = qwen3
+    want = _oracle(model, params, _requests(cfg))
+    results = {}
+    for name in ("engine", "router"):
+        backend = (_engine(model, params) if name == "engine"
+                   else RequestRouter([_engine(model, params)]))
+        done = backend.run(_requests(cfg), realtime=False)
+        results[name] = {r.rid: list(r.generated) for r in done}
+        st = backend.stats()
+        for key in ("n_decode_steps", "n_prefill_chunks",
+                    "n_prefill_dispatches"):
+            assert key in st, (name, key)
+    assert results["engine"] == results["router"] == want
+
+
+# --------------------------------------------------------------- events
+@pytest.mark.parametrize("make", ["engine", "router"])
+def test_stream_events_concatenate_to_generated(qwen3, make):
+    """Driving submit/step/drain_events by hand, the concatenated
+    per-rid event tokens reproduce Request.generated exactly and every
+    stream ends with exactly one finished event."""
+    cfg, model, params = qwen3
+    reqs = _requests(cfg)
+    backend = (_engine(model, params, spec_k=3) if make == "engine"
+               else RequestRouter([_engine(model, params, spec_k=3)]))
+    for r in reqs:
+        backend.submit(r)
+    got = {r.rid: [] for r in reqs}
+    fins = {r.rid: 0 for r in reqs}
+    while backend.step():
+        for ev in backend.drain_events():
+            assert isinstance(ev, StreamEvent)
+            got[ev.rid].extend(ev.tokens)
+            fins[ev.rid] += bool(ev.finished)
+    for ev in backend.drain_events():
+        got[ev.rid].extend(ev.tokens)
+        fins[ev.rid] += bool(ev.finished)
+    for r in reqs:
+        assert got[r.rid] == list(r.generated), r.rid
+        assert fins[r.rid] == 1, r.rid
+
+
+def test_extract_resubmit_resumes_exactly(qwen3):
+    """extract() mid-flight frees the slot; resubmitting the same
+    Request resumes the stream token-exactly (replay machinery)."""
+    cfg, model, params = qwen3
+    reqs = _requests(cfg, n=3, gen=12)
+    want = _oracle(model, params, reqs)
+    eng = _engine(model, params)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    victim = eng.extract(1)
+    assert victim is reqs[1] and not victim.finished
+    assert eng.extract(99) is None
+    while eng.step():
+        pass
+    eng.submit(victim)
+    while eng.step():
+        pass
+    eng.drain_events()
+    assert {r.rid: list(r.generated) for r in reqs} == want
+
+
+# ---------------------------------------------------------- ServeOptions
+def test_serve_options_cli_round_trip():
+    ap = argparse.ArgumentParser()
+    ServeOptions.add_cli(ap)
+    args = ap.parse_args(["--batch", "8", "--page-size", "4",
+                          "--no-spec", "--bucket-edges", "2,4,8",
+                          "--no-prefix-sharing", "--replicas", "3",
+                          "--router-policy", "round-robin",
+                          "--tenant-weights", "gold=3,free=1"])
+    opts = ServeOptions.from_args(args)
+    assert opts.batch == 8 and opts.page_size == 4
+    assert opts.spec_k == 0 and not opts.prefix_sharing
+    assert opts.bucket_edges == [2, 4, 8]
+    assert opts.replicas == 3 and opts.router_policy == "round-robin"
+    assert opts.tenant_weights == {"gold": 3.0, "free": 1.0}
+
+
+def test_serve_options_sized_for_and_build(qwen3):
+    cfg, model, params = qwen3
+    reqs = _requests(cfg)
+    opts = ServeOptions(batch=2, page_size=8, chunk_size=16)
+    with pytest.raises(ValueError):
+        opts.build(model, params)          # n_pages unresolved
+    sized = opts.sized_for(reqs)
+    assert sized.n_pages > 0 and sized.max_pages_per_seq is not None
+    assert opts.n_pages == 0               # original untouched
+    eng = sized.build(model, params)
+    assert isinstance(eng, ServeEngine)
+    fleet = ServeOptions(batch=2, page_size=8, chunk_size=16,
+                         replicas=2).sized_for(reqs).build(model, params)
+    assert isinstance(fleet, RequestRouter)
+    assert len(fleet.replicas) == 2
+    done = fleet.run(reqs, realtime=False)
+    assert {r.rid: list(r.generated) for r in done} \
+        == _oracle(model, params, _requests(cfg))
+
+
+def test_run_engine_shim_deprecated(qwen3):
+    cfg, model, params = qwen3
+    from repro.launch.serve import run_engine
+    reqs = _requests(cfg, n=3)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        stats = run_engine(model, params, reqs, batch=2, page_size=8,
+                           n_pages=48, realtime=False, chunk_size=16)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert stats["tokens"] == sum(r.max_new_tokens for r in reqs)
