@@ -25,7 +25,8 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, nkv: int, bq: int, bkv: int, causal: bool, scale: float):
+            *, nkv: int, bq: int, bkv: int, causal: bool, scale: float,
+            q_offset: int):
     kv_i = pl.program_id(2)
 
     @pl.when(kv_i == 0)
@@ -41,7 +42,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     if causal:
         q_i = pl.program_id(1)
-        q_pos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        # q_offset shifts every query to absolute position q + q_offset
+        # (ragged decode: sq < skv queries aligned to the END of kv,
+        # matching ref.py's tril(k=skv-sq) semantics at offset skv-sq)
+        q_pos = (q_offset + q_i * bq
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0))
         k_pos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
         s = jnp.where(k_pos <= q_pos, s, NEG_INF)
 
@@ -63,11 +68,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, bq: int = 256, bkv: int = 256,
+                    q_offset: int = 0,
                     interpret: bool = False) -> jax.Array:
     """q: (BH, Sq, D); k/v: (BKV, Skv, D) with BH = BKV * group.
 
     Heads are flattened into the leading dim; the kv index map divides
-    by the GQA group.  Returns (BH, Sq, D).
+    by the GQA group.  ``q_offset`` places query i at absolute position
+    ``i + q_offset`` for the causal mask (ragged decode: ``sq < skv``
+    with queries aligned to the end of kv uses ``skv - sq``).  Returns
+    (BH, Sq, D).
     """
     bh, sq, d = q.shape
     bkvh, skv, _ = k.shape
@@ -79,7 +88,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     return pl.pallas_call(
         functools.partial(_kernel, nkv=nkv, bq=bq, bkv=bkv,
-                          causal=causal, scale=scale),
+                          causal=causal, scale=scale,
+                          q_offset=int(q_offset)),
         grid=(bh, nq, nkv),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),

@@ -13,10 +13,16 @@ __all__ = ["attention"]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
-                                             "interpret"))
+                                             "q_offset", "interpret"))
 def attention(q, k, v, *, causal: bool = True, bq: int = 256,
-              bkv: int = 256, interpret: bool = False):
-    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D) -> (B, Sq, H, D)."""
+              bkv: int = 256, q_offset: int = 0,
+              interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D) -> (B, Sq, H, D).
+
+    ``q_offset`` shifts the causal mask: query i sits at absolute
+    position ``i + q_offset`` (ragged ``sq < skv`` attention with
+    queries aligned to the end of kv — the ``attention_ref`` offset
+    semantics — uses ``skv - sq``)."""
     b, sq, h, d = q.shape
     kvh = k.shape[2]
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
@@ -26,5 +32,5 @@ def attention(q, k, v, *, causal: bool = True, bq: int = 256,
     # flatten batch-major so the division stays aligned
     out = flash_attention(qf, kf, vf, causal=causal,
                           bq=min(bq, sq), bkv=min(bkv, k.shape[1]),
-                          interpret=interpret)
+                          q_offset=q_offset, interpret=interpret)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -85,6 +85,10 @@ def _drive(front, reqs, *, realtime: bool):
             "tok_per_s": toks / max(dt, 1e-9),
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
             "decode_steps": sum(e.n_decode_steps for e in engines),
+            "fused_dispatches": sum(e.n_fused_dispatches
+                                    for e in engines),
+            "total_dispatches": sum(e.n_total_dispatches
+                                    for e in engines),
             "prefill_chunks": n_pf_chunks,
             "prefill_dispatches": n_pf_disp,
             "prefill_rows_mean": n_pf_chunks / max(n_pf_disp, 1),
@@ -264,6 +268,8 @@ def main():
           f"{stats['prefill_chunks']} prefill chunks in "
           f"{stats['prefill_dispatches']} dispatches "
           f"({stats['prefill_rows_mean']:.2f} rows/dispatch), "
+          f"{stats['fused_dispatches']}/{stats['total_dispatches']} "
+          f"launches fused, "
           f"{stats['shared_tokens']} prefix tokens reused, "
           f"{stats['cow_copies']} COW copies")
     if args.stats:

@@ -490,6 +490,50 @@ def _tp_gather_heads(x, tp_axis, axis: int):
     return lax.all_gather(x, tp_axis, axis=axis, tiled=True)
 
 
+def chunk_scatter_targets(starts, n_valid, table_rows, n_tokens,
+                          page_size):
+    """Pure masking math for the chunked-prefill KV scatter: map token
+    t of row b (absolute position ``starts[b] + t``) to its
+    (page id, slot) write target.
+
+    Padding tokens (``t >= n_valid[b]``) and positions whose page index
+    falls past the row's table width are routed to the null page (page
+    0, see serve/kv_cache.py), so a fixed-shape scatter never touches
+    live data for lanes the scheduler didn't fill.  Returns
+    (pid, slot), both (B, n_tokens) int32.
+    """
+    t = jnp.arange(n_tokens)[None, :]                      # (1, T)
+    abs_pos = starts[:, None] + t                          # (B, T)
+    nb = table_rows.shape[1]
+    idx = jnp.minimum(abs_pos // page_size, nb - 1)
+    pid = jnp.where(t < n_valid[:, None],
+                    jnp.take_along_axis(table_rows, idx, axis=1), 0)
+    slot = abs_pos % page_size
+    return pid.astype(jnp.int32), slot.astype(jnp.int32)
+
+
+def verify_scatter_targets(lengths, page_table, n_tokens, page_size):
+    """Pure masking math for the decode/verify KV scatter: token t of
+    row b sits at absolute position ``lengths[b] + t`` and writes to
+    ``page_table[b, pos // page_size]`` at slot ``pos % page_size``.
+
+    A position past the end of the page table must land on the null
+    page — the default clamping gather would alias it onto the row's
+    *last* live page and corrupt confirmed history.  Inactive rows
+    carry all-zero tables, so their writes also fall on the null page.
+    Returns (pid, slot), both (B, n_tokens) int32.
+    """
+    B = lengths.shape[0]
+    nb = page_table.shape[1]
+    abs_pos = lengths[:, None] + jnp.arange(n_tokens)[None, :]  # (B, T)
+    bidx = jnp.arange(B)[:, None]
+    idx = abs_pos // page_size
+    pid = jnp.where(idx < nb,
+                    page_table[bidx, jnp.minimum(idx, nb - 1)], 0)
+    slot = abs_pos % page_size
+    return pid.astype(jnp.int32), slot.astype(jnp.int32)
+
+
 def paged_attention_block(p, x, cfg, *, positions, k_pages, v_pages,
                           page_table, lengths, tp_axis=None):
     """Paged decode attention sub-layer (continuous batching).
@@ -553,17 +597,7 @@ def paged_verify_attention_block(p, x, cfg, *, positions, k_pages,
     B, T, D = x.shape
     q, k, v = _project_qkv(p, x, cfg, positions)
     ps = k_pages.shape[1]
-    nb = page_table.shape[1]
-    abs_pos = lengths[:, None] + jnp.arange(T)[None, :]         # (B, T)
-    bidx = jnp.arange(B)[:, None]
-    # a padding position past the end of the page table must land on
-    # the null page — the default clamping gather would alias it onto
-    # the row's *last* live page and corrupt confirmed history
-    idx = abs_pos // ps
-    pidx = jnp.where(idx < nb,
-                     page_table[bidx, jnp.minimum(idx, nb - 1)],
-                     0)                                         # (B, T)
-    slot = abs_pos % ps
+    pidx, slot = verify_scatter_targets(lengths, page_table, T, ps)
     k_pages = k_pages.at[pidx, slot].set(k.astype(k_pages.dtype))
     v_pages = v_pages.at[pidx, slot].set(v.astype(v_pages.dtype))
     out = paged_verify_attention_ref(q, k_pages, v_pages, page_table,

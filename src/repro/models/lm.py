@@ -468,13 +468,8 @@ class DecoderLM:
         # write-target pages are private per row — COW at admission —
         # so co-ingested rows can never scatter into each other)
         ps_ = state["k_pages"].shape[2]
-        nb = table_rows.shape[1]
-        t = jnp.arange(n)[None]                        # (1, C)
-        abs_pos = starts[:, None] + t                  # (B, C)
-        idx = jnp.minimum(abs_pos // ps_, nb - 1)
-        pid = jnp.where(t < n_valid[:, None],
-                        jnp.take_along_axis(table_rows, idx, axis=1), 0)
-        slot = abs_pos % ps_
+        pid, slot = C.chunk_scatter_targets(starts, n_valid, table_rows,
+                                            n, ps_)
         k_pages = state["k_pages"].at[:, pid, slot].set(
             ks.astype(state["k_pages"].dtype))
         v_pages = state["v_pages"].at[:, pid, slot].set(
@@ -593,3 +588,117 @@ class DecoderLM:
         logits = C.unembed(params["embed"], x, cfg)
         return logits, {"k_pages": k_pages, "v_pages": v_pages,
                         "page_tables": tables, "lengths": lengths}
+
+    def fused_step_paged(self, params, state, d_tokens, p_tokens,
+                         p_table_rows, p_starts, p_n_valid,
+                         tp_axis=None):
+        """One fused engine step: decode/verify every DECODING slot AND
+        ingest one prompt chunk for every PREFILLING request in a
+        single program dispatch (the steady-state step of the serve
+        engine collapses from two launches to one).
+
+        ``d_tokens``: (B, T) — the decode/verify rows, exactly as
+        ``decode_step_paged`` (T == 1) / ``verify_step_paged`` (T > 1)
+        would receive them, positioned by ``state["lengths"]``.
+        ``p_tokens`` / ``p_table_rows`` / ``p_starts`` / ``p_n_valid``:
+        the chunked-prefill rows, exactly as ``prefill_chunk_paged``
+        would receive them (inactive rows null-routed).  Returns
+        ``((d_logits (B, T, V), p_logits (Bp, V)), new state)`` with
+        ``lengths`` unadvanced (the host owns authoritative lengths).
+
+        Token-exactness vs the two sequential dispatches rests on page
+        **write/read disjointness**: prefill rows scatter only into
+        their own private pages (copy-on-write at admission; shared
+        trie pages are read-only), decode rows write only into pages
+        ``ensure_headroom`` privatized for them, decode gathers only
+        active-slot tables (which never contain a prefill row's private
+        pages) and prefill gathers only its own table prefix (which
+        never contains a decode write target).  Both groups therefore
+        read the *incoming* pages — exactly what each would see
+        dispatched separately in either order — and their page scatters
+        land on disjoint (page, slot) targets, so the combined update
+        commutes.  Inside one step every other op is row-independent
+        (components.paged_chunk_attention_block /
+        paged_verify_attention_block), so each row is bit-identical to
+        its unfused counterpart.
+        """
+        assert self.supports_paged_decode()
+        cfg = self.cfg
+        assert not (tp_axis is not None and cfg.moe is not None)
+        dtype = jnp.dtype(cfg.compute_dtype)
+        lengths = state["lengths"]
+        tables = state["page_tables"]
+        B, T = d_tokens.shape
+        Cn = p_tokens.shape[1]
+        d_positions = (lengths[:, None]
+                       + jnp.arange(T, dtype=jnp.int32)[None, :])
+        p_positions = (p_starts[:, None]
+                       + jnp.arange(Cn, dtype=jnp.int32)[None])
+        xd = self._embed_inputs(
+            params, {"tokens": d_tokens, "positions": d_positions},
+            dtype)
+        xp = self._embed_inputs(
+            params, {"tokens": p_tokens, "positions": p_positions},
+            dtype)
+        use_moe = cfg.moe is not None
+
+        def body(carry, inp):
+            xd, xp = carry
+            lp, kp, vp = inp
+            # prefill attention first, reading the incoming pages
+            # (decode's writes are not in any prefill table — see
+            # disjointness above — so the order is unobservable);
+            # its K/V persists in one stacked scatter after the scan
+            hp = C.apply_norm(lp["ln1"], xp, cfg.norm_kind, cfg.norm_eps)
+            mixp, k, v = C.paged_chunk_attention_block(
+                lp["mix"], hp, cfg, positions=p_positions,
+                starts=p_starts, n_valid=p_n_valid, k_pages=kp,
+                v_pages=vp, table_rows=p_table_rows, tp_axis=tp_axis)
+            xp = xp + mixp
+            hp2 = C.apply_norm(lp["ln2"], xp, cfg.norm_kind,
+                               cfg.norm_eps)
+            if use_moe:
+                fp, _ = C.moe_block(lp["ffn"], hp2, cfg)
+            else:
+                fp = C.mlp_block(lp["ffn"], hp2, cfg, tp_axis=tp_axis)
+            xp = xp + fp
+            # decode/verify rows: T == 1 verification IS the decode
+            # step bit for bit (paged_verify_attention_block), so one
+            # body serves both widths
+            hd = C.apply_norm(lp["ln1"], xd, cfg.norm_kind, cfg.norm_eps)
+            mixd, kp, vp = C.paged_verify_attention_block(
+                lp["mix"], hd, cfg, positions=d_positions, k_pages=kp,
+                v_pages=vp, page_table=tables, lengths=lengths,
+                tp_axis=tp_axis)
+            xd = xd + mixd
+            hd2 = C.apply_norm(lp["ln2"], xd, cfg.norm_kind,
+                               cfg.norm_eps)
+            if use_moe:
+                fd, _ = C.moe_block(lp["ffn"], hd2, cfg)
+            else:
+                fd = C.mlp_block(lp["ffn"], hd2, cfg, tp_axis=tp_axis)
+            xd = xd + fd
+            return (xd, xp), (kp, vp, k, v)
+
+        (xd, xp), (k_pages, v_pages, ks, vs) = lax.scan(
+            body, (xd, xp), (params["layers"], state["k_pages"],
+                             state["v_pages"]))
+        # persist the prefill chunks' K/V into the decode-updated pages
+        # (disjoint write targets, so this commutes with the decode
+        # writes already applied in the scan)
+        ps_ = state["k_pages"].shape[2]
+        pid, slot = C.chunk_scatter_targets(p_starts, p_n_valid,
+                                            p_table_rows, Cn, ps_)
+        k_pages = k_pages.at[:, pid, slot].set(ks.astype(k_pages.dtype))
+        v_pages = v_pages.at[:, pid, slot].set(vs.astype(v_pages.dtype))
+        xd = C.apply_norm(params["final_norm"], xd, cfg.norm_kind,
+                          cfg.norm_eps)
+        d_logits = C.unembed(params["embed"], xd, cfg)
+        xp = C.apply_norm(params["final_norm"], xp, cfg.norm_kind,
+                          cfg.norm_eps)
+        last = jnp.take_along_axis(
+            xp, jnp.maximum(p_n_valid - 1, 0)[:, None, None], axis=1)
+        p_logits = C.unembed(params["embed"], last, cfg)[:, 0]
+        return (d_logits, p_logits), {
+            "k_pages": k_pages, "v_pages": v_pages,
+            "page_tables": tables, "lengths": lengths}

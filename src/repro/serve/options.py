@@ -17,6 +17,7 @@ owns how they compose into objects.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
@@ -48,6 +49,7 @@ class ServeOptions:
     bucket_edges: Optional[List[int]] = None
     spec_k: int = 4
     draft_config: str = ""
+    fused: bool = True               # one dispatch per steady-state step
     max_pages_per_seq: Optional[int] = None
     eos_id: Optional[int] = None
     # fleet
@@ -88,6 +90,13 @@ class ServeOptions:
         ap.add_argument("--no-spec", action="store_true",
                         help="disable speculative decode (one token per "
                              "decode step)")
+        ap.add_argument("--fused", default=True,
+                        action=argparse.BooleanOptionalAction,
+                        help="fuse each steady-state step's prefill "
+                             "chunk + decode/verify work into ONE "
+                             "program dispatch (tokens unchanged; "
+                             "--no-fused is the debugging escape hatch "
+                             "back to the two-dispatch engine)")
         ap.add_argument("--draft-config", type=str, default="",
                         help="arch id of a draft model for speculation "
                              "(default: model-free n-gram prompt "
@@ -133,6 +142,7 @@ class ServeOptions:
             bucket_edges=edges,
             spec_k=0 if args.no_spec else args.spec_k,
             draft_config=args.draft_config,
+            fused=getattr(args, "fused", True),
             tp=args.tp,
             replicas=args.replicas,
             router_policy=args.router_policy,
@@ -211,6 +221,7 @@ class ServeOptions:
                 bucket_edges=self.bucket_edges, spec_k=self.spec_k,
                 drafter=(drafter_factory() if drafter_factory
                          else None),
+                fused=self.fused,
                 programs=programs)
 
         if self.replicas > 1:

@@ -59,8 +59,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..launch.mesh import make_mesh
 from ..sharding.compat import shard_map_compat
 from ..sharding.rules import SERVE_TP_AXIS, serve_tp_spec
-from .step import (make_chunk_prefill_step, make_paged_decode_step,
-                   make_verify_step)
+from .step import (make_chunk_prefill_step, make_fused_step,
+                   make_paged_decode_step, make_verify_step)
 
 __all__ = ["TPServePrograms", "make_tp_mesh", "validate_tp",
            "tp_param_specs", "PAGE_SPEC"]
@@ -160,6 +160,7 @@ class TPServePrograms:
             in_specs=(self._pspecs, kv_state, P(), P(), P(), P()),
             out_specs=(P(), kv_state), check_vma=False))
         self._verify = None
+        self._fused = None
         self._params_cache: Dict[int, object] = {}
 
     @property
@@ -173,6 +174,23 @@ class TPServePrograms:
                 in_specs=(self._pspecs, full_state, P()),
                 out_specs=(P(), full_state), check_vma=False))
         return self._verify
+
+    @property
+    def fused(self):
+        # the fused step's decode half takes the full masked state, its
+        # prefill half the same replicated control metadata as chunk;
+        # outputs are (replicated tokens, sharded page state) — so the
+        # specs are exactly the union of decode's and chunk's
+        if self._fused is None:
+            full_state = {"k_pages": PAGE_SPEC, "v_pages": PAGE_SPEC,
+                          "page_tables": P(), "lengths": P()}
+            self._fused = jax.jit(shard_map_compat(
+                make_fused_step(self._local, tp_axis=SERVE_TP_AXIS),
+                mesh=self.mesh,
+                in_specs=(self._pspecs, full_state, P(), P(), P(), P(),
+                          P()),
+                out_specs=((P(), P()), full_state), check_vma=False))
+        return self._fused
 
     def prepare_params(self, params):
         """device_put ``params`` into the TP layout (cached by object

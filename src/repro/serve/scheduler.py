@@ -50,6 +50,17 @@ ever-changing population of requests.  The request lifecycle is
   (kv_cache.ensure_headroom / rollback_spec), so speculation composes
   with chunked prefill, prefix sharing/COW, and preemption without new
   aliasing states.
+* **Fused steady-state step** (``fused=True``, the default): a step
+  with both PREFILLING and DECODING work launches ONE uber-program
+  (``models/lm.fused_step_paged``) covering the chunk ingestion *and*
+  the decode/verify round, instead of two back-to-back dispatches.
+  Page write/read disjointness (prefill rows touch only their own
+  private pages, decode rows only headroom-privatized ones) makes the
+  merge bitwise; rows promoted out of a fused dispatch join the decode
+  batch on the *next* step, which shifts step boundaries but never
+  token values.  Degenerate mixes — prefill-only ramp, decode-only
+  tail — take the standalone programs either way, so ``fused=False``
+  reproduces the two-dispatch engine dispatch-for-dispatch.
 
 Every step keeps the token-parity guarantee: generated streams are
 bit-identical to the sequential ``greedy_generate`` oracle, with or
@@ -128,6 +139,7 @@ class ServeEngine:
                  bucket_edges: Optional[Sequence[int]] = None,
                  spec_k: int = 0,
                  drafter=None,
+                 fused: bool = True,
                  programs: Optional[ServePrograms] = None,
                  tp: int = 1,
                  mesh=None):
@@ -187,6 +199,13 @@ class ServeEngine:
         else:
             self.drafter = None
             self._verify = None
+        # fused uber-program: steady-state steps with both PREFILLING
+        # and DECODING work launch ONE program instead of two
+        # (programs.fused is built lazily, so --no-fused engines never
+        # trace it).  Degenerate mixes — prefill-only ramp, decode-only
+        # tail — take the standalone programs either way, so fusion off
+        # reproduces the unfused engine dispatch-for-dispatch.
+        self.fused = bool(fused)
         self.waiting: deque[Request] = deque()
         self.prefilling: "OrderedDict[int, Request]" = OrderedDict()
         self.active: Dict[int, Request] = {}      # slot -> DECODING req
@@ -201,6 +220,13 @@ class ServeEngine:
         self.n_prefill_chunks = 0        # per-row chunks ingested
         self.n_prefill_dispatches = 0    # prefill program launches
         self.n_replay_steps = 0
+        # dispatch accounting: n_total_dispatches counts EVERY program
+        # launch (prefill, decode/verify, replay, fused); a fused
+        # launch also increments the prefill + decode counters it
+        # subsumes, so fused-off arithmetic (total = prefill + decode +
+        # replay) loses exactly n_fused_dispatches when fusion is on
+        self.n_fused_dispatches = 0
+        self.n_total_dispatches = 0
         # speculation stats (accept rate = n_draft_accepted / n_drafted)
         self.n_spec_rounds = 0
         self.n_drafted = 0
@@ -415,16 +441,18 @@ class ServeEngine:
         order (re-admissions insert fresh)."""
         self._dispatch_prefill(list(self.prefilling.items()), now)
 
-    def _dispatch_prefill(self, group, now: float) -> None:
-        """Ingest one chunk for each (slot, req) in ``group`` in ONE
-        batched program dispatch; promote rows whose chunk completes
-        their prompt.  Exactness: every program input row is exactly
-        what the serialized path would have dispatched alone — same
-        tokens, start, valid count, and page-table prefix (the shared
-        context bucket only pads the gathered buffer with fully-masked
-        lanes, exact no-ops) — and the program is row-independent, so
-        each request's stream is bitwise identical to serialized
-        ingestion regardless of co-tenants."""
+    def _prefill_inputs(self, group):
+        """Build one batched chunked-prefill dispatch's input arrays for
+        ``group`` = [(slot, req), ...]: fixed-shape (Bp, C) tokens plus
+        per-row starts / valid counts / bucketed page-table rows.
+        Exactness: every row is exactly what the serialized path would
+        have dispatched alone — same tokens, start, valid count, and
+        page-table prefix (the shared context bucket only pads the
+        gathered buffer with fully-masked lanes, exact no-ops) — and
+        the program is row-independent, so each request's stream is
+        bitwise identical to serialized ingestion regardless of
+        co-tenants.  Returns (tokens, tables, starts, valids, metas)
+        with metas = [(row, slot, req, valid), ...]."""
         Bp, Csz = self.prefill_batch, self.chunk_size
         assert len(group) <= Bp, (len(group), Bp)
         tokens = np.zeros((Bp, Csz), np.int32)
@@ -446,6 +474,15 @@ class ServeEngine:
         tables = np.zeros((Bp, nb), np.int32)
         for (r, slot, req, valid), own in zip(metas, buckets):
             tables[r, :own] = self.cache.page_tables[slot, :own]
+        return tokens, tables, starts, valids, metas
+
+    def _dispatch_prefill(self, group, now: float) -> None:
+        """Ingest one chunk for each (slot, req) in ``group`` in ONE
+        batched program dispatch; promote rows whose chunk completes
+        their prompt (_prefill_inputs / _finish_prefill carry the
+        exactness argument)."""
+        tokens, tables, starts, valids, metas = \
+            self._prefill_inputs(group)
         state = {"k_pages": self.cache.k_pages,
                  "v_pages": self.cache.v_pages}
         tok, state = self._chunk(self.params, state,
@@ -457,7 +494,13 @@ class ServeEngine:
         self.cache.v_pages = state["v_pages"]
         self.n_prefill_dispatches += 1
         self.n_prefill_chunks += len(metas)
-        tok = np.asarray(tok)
+        self.n_total_dispatches += 1
+        self._finish_prefill(metas, np.asarray(tok), now)
+
+    def _finish_prefill(self, metas, tok, now: float) -> None:
+        """Advance and promote the rows of a completed prefill dispatch
+        (``tok``: the dispatch's (Bp, 1) next-token output, host-side).
+        """
         # advance every row before any promotion: promotion may replay,
         # replay may preempt — and preemption resets the victim's
         # prefill_pos, which must already reflect this dispatch
@@ -526,6 +569,7 @@ class ServeEngine:
             self.cache.v_pages = state["v_pages"]
             self.cache.lengths[slot] += 1
             self.n_replay_steps += 1
+            self.n_total_dispatches += 1
 
     def _done(self, req: Request) -> bool:
         return (len(req.generated) >= req.max_new_tokens
@@ -571,58 +615,71 @@ class ServeEngine:
                 "page_tables": jax.numpy.asarray(tables),
                 "lengths": jax.numpy.asarray(lengths)}
 
-    # ------------------------------------------------------ speculation
-    def _spec_round(self, now: float) -> None:
-        """One VERIFYING round over every DECODING slot: draft up to
-        ``spec_k`` tokens per row, privatize pages for the whole write
-        window, score all ``k+1`` positions in one batched verify
-        program, bank the longest matching draft prefix plus the
-        verifier's bonus token, then roll back rejected page growth.
+    # ----------------------------------------------------- decode round
+    def _prepare_decode(self, now: float):
+        """Host-side half of one decode/verify round, shared by the
+        fused and unfused paths: draft (under speculation), privatize
+        page headroom for every DECODING slot's write window (evicting
+        on pressure), and build the round's fixed-shape (B, T) token
+        array.  Returns (tokens, drafts, any_draft), or None when
+        pressure evicted every DECODING slot.
 
         A row whose drafter returns nothing still participates — its
         round IS a decode step (one write, one bonus token) — so the
         batch never splits into spec and non-spec programs.  When *no*
-        row drafted anything, the round dispatches the plain 1-wide
-        decode program instead of a (k+1)-wide verify of pure padding;
-        both produce the identical next token, only the width differs."""
-        k = self.spec_k
-        drafts: Dict[int, List[int]] = {}
-        for slot, req in self.active.items():
-            # cap the draft so even full acceptance cannot outrun
-            # max_new_tokens — which also keeps every speculative write
-            # inside the page budget submit() admitted the request under
-            cap = min(k, req.max_new_tokens - len(req.generated) - 1)
-            d = self.drafter.propose(slot, req, cap) if cap > 0 else []
-            drafts[slot] = [int(t) for t in d[:max(cap, 0)]]
-        # page headroom for every position this row can confirm
-        # (n_draft + 1 writes).  Padded verify positions past the window
-        # land on the null page or on this slot's own private pages —
-        # never on shared ones (pages past the write frontier are never
-        # donated to the trie) — so they need no budget.
-        self._ensure_headroom_all(
-            now, {s: len(d) + 1 for s, d in drafts.items()})
-        if not self.active:          # pressure evicted everyone
-            return
-
-        any_draft = any(drafts[slot] for slot in self.active)
-        T = k + 1 if any_draft else 1
+        row drafted anything, the round is 1 wide (a plain decode step)
+        instead of a (k+1)-wide verify of pure padding; both produce
+        the identical next token, only the width differs."""
+        if self.spec_k > 0:
+            k = self.spec_k
+            drafts: Dict[int, List[int]] = {}
+            for slot, req in self.active.items():
+                # cap the draft so even full acceptance cannot outrun
+                # max_new_tokens — which also keeps every speculative
+                # write inside the page budget submit() admitted the
+                # request under
+                cap = min(k, req.max_new_tokens - len(req.generated) - 1)
+                d = self.drafter.propose(slot, req, cap) if cap > 0 \
+                    else []
+                drafts[slot] = [int(t) for t in d[:max(cap, 0)]]
+            # page headroom for every position this row can confirm
+            # (n_draft + 1 writes).  Padded verify positions past the
+            # window land on the null page or on this slot's own
+            # private pages — never on shared ones (pages past the
+            # write frontier are never donated to the trie) — so they
+            # need no budget.
+            self._ensure_headroom_all(
+                now, {s: len(d) + 1 for s, d in drafts.items()})
+            if not self.active:          # pressure evicted everyone
+                return None
+            any_draft = any(drafts[slot] for slot in self.active)
+            T = k + 1 if any_draft else 1
+        else:
+            # page headroom for this step's token writes (growth or COW
+            # of a trie-donated page); evict on pressure
+            drafts, any_draft, T = {}, False, 1
+            self._ensure_headroom_all(now, {})
+            if not self.active:          # pressure evicted everyone
+                return None
         tokens = np.zeros((self.max_batch, T), np.int32)
         for slot, req in self.active.items():
             tokens[slot, 0] = req.generated[-1]
-            d = drafts[slot]
+            d = drafts.get(slot, [])
             tokens[slot, 1:1 + len(d)] = d
-        program = self._verify if any_draft else self._decode
-        nxt, state = program(self.params, self._masked_state(),
-                             jax.numpy.asarray(tokens))
-        self.cache.k_pages = state["k_pages"]
-        self.cache.v_pages = state["v_pages"]
+        return tokens, drafts, any_draft
+
+    def _apply_decode(self, nxt, drafts, any_draft, now: float) -> None:
+        """Bank one decode/verify round's token output ``nxt``
+        ((B, 1) or (B, T), host- or device-side).  The acceptance loop
+        is the unified form: with no drafts it degenerates to appending
+        row token 0 (a = 0, the eos truncation is a no-op on a single
+        token), which is exactly the plain decode bank."""
         self.n_decode_steps += 1
         self.n_spec_rounds += any_draft
         nxt = np.asarray(nxt)
-
         for slot in list(self.active):
             req = self.active[slot]
-            d, row = drafts[slot], nxt[slot]
+            d, row = drafts.get(slot, []), nxt[slot]
             # accept the longest draft prefix the target itself would
             # have generated; row[a] is then the free bonus token
             a = 0
@@ -638,19 +695,66 @@ class ServeEngine:
             self.n_drafted += len(d)
             # drafts past an accepted eos were never banked
             self.n_draft_accepted += min(a, len(appended))
-            self.cache.rollback_spec(slot)
+            if self.spec_k > 0:
+                self.cache.rollback_spec(slot)
             if self._done(req):
                 self._finish(slot, now)
             # confirmed in one burst: the streaming face of speculation
             self._emit(req, appended)
 
+    def _decode_round(self, tokens, drafts, any_draft,
+                      now: float) -> None:
+        """Unfused decode/verify dispatch over the prepared round."""
+        program = self._verify if tokens.shape[1] > 1 else self._decode
+        nxt, state = program(self.params, self._masked_state(),
+                             jax.numpy.asarray(tokens))
+        self.cache.k_pages = state["k_pages"]
+        self.cache.v_pages = state["v_pages"]
+        self.n_total_dispatches += 1
+        self._apply_decode(nxt, drafts, any_draft, now)
+
+    def _fused_round(self, tokens, drafts, any_draft,
+                     now: float) -> None:
+        """The fused uber-program: this step's decode/verify round AND
+        one chunk for every PREFILLING request in ONE dispatch
+        (models/lm.fused_step_paged carries the page-disjointness
+        argument that makes the merge bitwise).  The prefill inputs are
+        built *after* ``_prepare_decode`` ran: its headroom pass may
+        preempt a PREFILLING slot, and the dispatch must see the
+        survivors.  Decode results are banked before prefill
+        promotions: promotion may replay, replay may preempt — an
+        unapplied decode token must never be dropped."""
+        group = list(self.prefilling.items())
+        p_tokens, tables, starts, valids, metas = \
+            self._prefill_inputs(group)
+        (d_nxt, p_nxt), state = self.programs.fused(
+            self.params, self._masked_state(),
+            jax.numpy.asarray(tokens),
+            jax.numpy.asarray(p_tokens),
+            jax.numpy.asarray(tables),
+            jax.numpy.asarray(starts),
+            jax.numpy.asarray(valids))
+        self.cache.k_pages = state["k_pages"]
+        self.cache.v_pages = state["v_pages"]
+        # one launch subsumes a prefill dispatch and a decode round:
+        # both sub-counters advance (their per-kind semantics — chunks
+        # ingested, rounds banked — are unchanged), total only once
+        self.n_fused_dispatches += 1
+        self.n_total_dispatches += 1
+        self.n_prefill_dispatches += 1
+        self.n_prefill_chunks += len(metas)
+        self._apply_decode(d_nxt, drafts, any_draft, now)
+        self._finish_prefill(metas, np.asarray(p_nxt), now)
+
     # ------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:
         """One engine iteration: admit what fits (up to
         ``prefill_batch`` co-ingesting prompts), advance every
-        prefilling request one chunk in batched dispatches, then one
-        batched decode step over every decoding slot.  Returns True
-        while any work remains (queued or in flight)."""
+        prefilling request one chunk, and run one decode/verify round
+        over every decoding slot — in the steady state (both kinds of
+        work pending) a single fused dispatch covers all of it
+        (``fused=True``, the default).  Returns True while any work
+        remains (queued or in flight)."""
         # Admission + prefill.  Chunk pacing exists to stop LONG
         # prompts from stalling in-flight decode, so only mid-prompt
         # chunks yield the step: short prompts (<= chunk_size) admit,
@@ -659,45 +763,31 @@ class ServeEngine:
         # with one still ingesting waits for its registration
         # (_defers_for_sharing), so bursts still share.  With no
         # decoders to protect, long prompts ingest back-to-back too.
+        # Under fusion, any pending chunk work while decoders exist is
+        # carried into this step's single fused dispatch instead of a
+        # standalone prefill launch; degenerate mixes — prefill-only
+        # ramp, decode-only tail — take the standalone programs, so
+        # they reproduce the unfused engine dispatch-for-dispatch.
         while True:
             self._admit_burst(now)
             if not self.prefilling:
                 break
+            if self.fused and self.active:
+                break              # chunks ride the fused dispatch
             self._run_prefill(now)
             if self.prefilling and self.active:
                 break                          # mid-prompt pacing point
         if not self.active:
             return bool(self.waiting or self.prefilling)
 
-        if self.spec_k > 0:
-            # VERIFYING replaces the plain decode step: same admission
-            # and prefill pacing above, multi-token verify below
-            self._spec_round(now)
-            return bool(self.active or self.prefilling or self.waiting)
-
-        # page headroom for this step's token writes (growth or COW of
-        # a trie-donated page); evict on pressure
-        self._ensure_headroom_all(now, {})
-
-        if not self.active:          # pressure evicted everyone
+        prep = self._prepare_decode(now)
+        if prep is None:             # pressure evicted everyone
             return bool(self.waiting or self.prefilling)
-
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for slot, req in self.active.items():
-            tokens[slot, 0] = req.generated[-1]
-        nxt, state = self._decode(self.params, self._masked_state(),
-                                  jax.numpy.asarray(tokens))
-        self.cache.k_pages = state["k_pages"]
-        self.cache.v_pages = state["v_pages"]
-        self.n_decode_steps += 1
-        nxt = np.asarray(nxt)
-        for slot in list(self.active):
-            req = self.active[slot]
-            req.generated.append(int(nxt[slot, 0]))
-            self.cache.lengths[slot] += 1
-            if self._done(req):
-                self._finish(slot, now)
-            self._emit(req, req.generated[-1:])
+        tokens, drafts, any_draft = prep
+        if self.fused and self.prefilling:
+            self._fused_round(tokens, drafts, any_draft, now)
+        else:
+            self._decode_round(tokens, drafts, any_draft, now)
         return bool(self.active or self.prefilling or self.waiting)
 
     # ------------------------------------------------------------ stats
@@ -712,6 +802,8 @@ class ServeEngine:
             "n_decode_steps": self.n_decode_steps,
             "n_prefill_chunks": self.n_prefill_chunks,
             "n_prefill_dispatches": self.n_prefill_dispatches,
+            "n_fused_dispatches": self.n_fused_dispatches,
+            "n_total_dispatches": self.n_total_dispatches,
             "prefill_rows_mean": (
                 self.n_prefill_chunks
                 / max(self.n_prefill_dispatches, 1)),

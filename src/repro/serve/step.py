@@ -15,6 +15,10 @@ Four program flavors:
   context length bucketed by the scheduler.
 * ``make_verify_step`` — score T = k+1 tokens per request in one pass
   (speculative decode); T = 1 is bit-for-bit one paged decode step.
+* ``make_fused_step`` — the decode/verify rows AND the chunked-prefill
+  rows of one engine step in a single dispatch (the steady-state
+  uber-program); each half is bit-identical to its standalone program
+  (models/lm.fused_step_paged spells out the disjointness argument).
 
 Invariants every program in this module preserves (the engine's parity
 guarantee composes out of them — docs/serving.md):
@@ -42,7 +46,8 @@ import jax.numpy as jnp
 
 __all__ = ["make_prefill_step", "make_decode_step",
            "make_paged_decode_step", "make_chunk_prefill_step",
-           "make_verify_step", "greedy_generate", "ServePrograms"]
+           "make_verify_step", "make_fused_step", "greedy_generate",
+           "ServePrograms"]
 
 
 def make_prefill_step(model, max_len=None) -> Callable:
@@ -116,6 +121,31 @@ def make_chunk_prefill_step(model, sample: str = "greedy",
     return chunk_step
 
 
+def make_fused_step(model, sample: str = "greedy",
+                    tp_axis: Optional[str] = None) -> Callable:
+    """Fused engine step: one dispatch covering both halves of a
+    steady-state iteration — the decode/verify rows (``tokens``
+    (B, T) against ``state``'s tables/lengths) and the chunked-prefill
+    rows (``p_tokens`` (B_pf, C) with their table rows / starts /
+    valid counts).  Returns ``((d_nxt (B, T), p_nxt (B_pf, 1)), new
+    page state)``: ``d_nxt`` is exactly what the decode (T == 1) or
+    verify (T > 1) program would return, ``p_nxt`` exactly what the
+    chunked-prefill program would return — the scheduler applies both
+    with the same host logic as the unfused paths."""
+    def fused_step(params, state, tokens, p_tokens, p_table_rows,
+                   p_starts, p_n_valid):
+        (d_logits, p_logits), state = model.fused_step_paged(
+            params, state, tokens, p_tokens, p_table_rows, p_starts,
+            p_n_valid, tp_axis=tp_axis)
+        if sample == "greedy":
+            d_nxt = jnp.argmax(d_logits, axis=-1).astype(jnp.int32)
+            p_nxt = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return (d_nxt, p_nxt[:, None]), state
+    return fused_step
+
+
 class ServePrograms:
     """The jit-compiled serving programs (decode / chunked prefill /
     verify) for one model, independent of any engine instance.
@@ -140,12 +170,20 @@ class ServePrograms:
         self.decode = jax.jit(make_paged_decode_step(model))
         self.chunk = jax.jit(make_chunk_prefill_step(model))
         self._verify = None
+        self._fused = None
 
     @property
     def verify(self):
         if self._verify is None:
             self._verify = jax.jit(make_verify_step(self.model))
         return self._verify
+
+    @property
+    def fused(self):
+        # lazy like verify: --no-fused engines never trace it
+        if self._fused is None:
+            self._fused = jax.jit(make_fused_step(self.model))
+        return self._fused
 
     # sharding hooks (overridden by TPServePrograms)
     def prepare_params(self, params):

@@ -1,0 +1,175 @@
+"""Property tests for the fused-step masking math, as pure functions.
+
+The fused uber-program (models/lm.fused_step_paged) is bitwise-equal to
+the two dispatches it replaces because of three masking facts, each
+tested here over randomized inputs:
+
+* prefill rows never read past ``start + valid`` — keys beyond a row's
+  causal frontier are exact no-ops for the online-softmax recurrence
+  (poisoning them cannot change one output bit);
+* decode/verify rows never read past ``lengths`` and never write live
+  data from a padding lane — scatter targets past the table width or
+  on invalid tokens land on the reserved null page;
+* the scatter-target maps (components.chunk_scatter_targets /
+  verify_scatter_targets) route exactly the valid (row, token) lanes
+  to the pages the host allocated, slot = position % page_size.
+
+Runs under real ``hypothesis`` (a test dependency, exercised by the CI
+property-tests job) AND the dependency-free shim in
+tests/_hypothesis_fallback.py (conftest.py installs it when the real
+package is absent) — strategies here stay inside the shim's surface:
+``integers`` / ``booleans`` / ``sampled_from`` and keyword bindings.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.models.components import (chunk_scatter_targets,
+                                     flash_attention,
+                                     verify_scatter_targets)
+
+
+# ------------------------------------------------- scatter-target maps
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), B=st.integers(1, 4),
+       C=st.sampled_from([4, 8, 16]), ps=st.sampled_from([4, 8]),
+       nb=st.integers(1, 6))
+def test_chunk_scatter_pads_to_null_valid_to_table(seed, B, C, ps, nb):
+    rng = np.random.default_rng(seed)
+    table = rng.integers(1, 64, size=(B, nb)).astype(np.int32)
+    # the scheduler invariant: every valid token's page index is inside
+    # the row's table (start + valid <= nb * ps)
+    n_valid = rng.integers(0, min(C, nb * ps) + 1,
+                           size=(B,)).astype(np.int32)
+    starts = np.array([rng.integers(0, nb * ps - v + 1) if v else 0
+                       for v in n_valid], np.int32)
+    pid, slot = chunk_scatter_targets(jnp.asarray(starts),
+                                      jnp.asarray(n_valid),
+                                      jnp.asarray(table), C, ps)
+    pid, slot = np.asarray(pid), np.asarray(slot)
+    for b in range(B):
+        for t in range(C):
+            if t >= n_valid[b]:
+                assert pid[b, t] == 0, "padding lane must null-route"
+            else:
+                pos = starts[b] + t
+                assert pid[b, t] == table[b, pos // ps]
+                assert slot[b, t] == pos % ps
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), B=st.integers(1, 4),
+       T=st.sampled_from([1, 3, 5]), ps=st.sampled_from([4, 8]),
+       nb=st.integers(1, 6))
+def test_verify_scatter_clamps_past_table_to_null(seed, B, T, ps, nb):
+    rng = np.random.default_rng(seed)
+    table = rng.integers(1, 64, size=(B, nb)).astype(np.int32)
+    # lengths free to run the write window off the table's end — those
+    # positions must hit the null page, NOT alias the last live page
+    lengths = rng.integers(0, nb * ps + T, size=(B,)).astype(np.int32)
+    pid, slot = verify_scatter_targets(jnp.asarray(lengths),
+                                       jnp.asarray(table), T, ps)
+    pid, slot = np.asarray(pid), np.asarray(slot)
+    for b in range(B):
+        for t in range(T):
+            pos = lengths[b] + t
+            if pos // ps < nb:
+                assert pid[b, t] == table[b, pos // ps]
+            else:
+                assert pid[b, t] == 0, \
+                    "past-table position must null-route"
+            assert slot[b, t] == pos % ps
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), B=st.integers(1, 3),
+       T=st.sampled_from([1, 4]), ps=st.sampled_from([4, 8]))
+def test_masked_row_scatter_is_all_null(seed, B, T, ps):
+    """An inactive row (all-zero table, zero length) — the fused
+    program's padding rows — writes nowhere but the null page."""
+    nb = 4
+    rng = np.random.default_rng(seed)
+    lengths = np.zeros((B,), np.int32)
+    pid, _ = verify_scatter_targets(jnp.asarray(lengths),
+                                    jnp.zeros((B, nb), jnp.int32), T, ps)
+    assert not np.asarray(pid).any()
+    starts = np.zeros((B,), np.int32)
+    n_valid = rng.integers(0, 3, size=(B,)).astype(np.int32)
+    pid, _ = chunk_scatter_targets(jnp.asarray(starts),
+                                   jnp.asarray(n_valid),
+                                   jnp.zeros((B, nb), jnp.int32), ps, ps)
+    assert not np.asarray(pid).any()
+
+
+# --------------------------------------------------- attention masking
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), B=st.integers(1, 3),
+       Sq=st.sampled_from([4, 8]), extra=st.integers(0, 12),
+       kv_chunk=st.sampled_from([4, 16]))
+def test_prefill_rows_never_read_past_their_frontier(seed, B, Sq, extra,
+                                                     kv_chunk):
+    """Poison every key/value beyond each row's causal frontier
+    (``q_offset[b] + Sq - 1``) — the fused/chunked prefill claim that
+    fully-masked lanes are exact no-ops means not one output bit may
+    change (max vs -1e30 cannot win, exp underflows to +0.0, and
+    x + 0.0 == x bitwise)."""
+    H = KVH = 2
+    Dh = 4
+    Skv = Sq + extra
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, Sq, H, Dh)).astype(np.float32)
+    k = rng.standard_normal((B, Skv, KVH, Dh)).astype(np.float32)
+    v = rng.standard_normal((B, Skv, KVH, Dh)).astype(np.float32)
+    offsets = rng.integers(0, Skv - Sq + 1, size=(B,)).astype(np.int32)
+    base = flash_attention(jnp.asarray(q), jnp.asarray(k),
+                           jnp.asarray(v), causal=True,
+                           kv_chunk=kv_chunk,
+                           q_offset=jnp.asarray(offsets))
+    kp, vp = k.copy(), v.copy()
+    for b in range(B):
+        kp[b, offsets[b] + Sq:] = 1e4 * (1 + rng.standard_normal(
+            (Skv - offsets[b] - Sq, KVH, Dh))).astype(np.float32)
+        vp[b, offsets[b] + Sq:] = -1e4
+    got = flash_attention(jnp.asarray(q), jnp.asarray(kp),
+                          jnp.asarray(vp), causal=True,
+                          kv_chunk=kv_chunk,
+                          q_offset=jnp.asarray(offsets))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), B=st.integers(1, 3),
+       ps=st.sampled_from([4, 8]), nb=st.integers(1, 3))
+def test_decode_rows_never_read_past_lengths_or_null_page(seed, B, ps,
+                                                          nb):
+    """Poison the null page and every page slot at positions >=
+    ``lengths[b]`` in each row's own (disjoint) table — paged decode
+    attention must not change by one bit (its valid mask ends at the
+    row's length, so co-tenant writes routed to the null page or to
+    positions past the frontier can never leak in)."""
+    H = KVH = 2
+    Dh = 4
+    n_pages = 1 + B * nb
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, H, Dh)).astype(np.float32)
+    k_pages = rng.standard_normal(
+        (n_pages, ps, KVH, Dh)).astype(np.float32)
+    v_pages = rng.standard_normal(
+        (n_pages, ps, KVH, Dh)).astype(np.float32)
+    # disjoint tables: row b owns pages [1 + b*nb, 1 + (b+1)*nb)
+    table = (1 + np.arange(B * nb, dtype=np.int32).reshape(B, nb))
+    lengths = rng.integers(1, nb * ps + 1, size=(B,)).astype(np.int32)
+    base = paged_attention_ref(jnp.asarray(q), jnp.asarray(k_pages),
+                               jnp.asarray(v_pages), jnp.asarray(table),
+                               jnp.asarray(lengths))
+    kp, vp = k_pages.copy(), v_pages.copy()
+    kp[0], vp[0] = 1e4, -1e4                    # the null page
+    for b in range(B):
+        for pos in range(lengths[b], nb * ps):
+            kp[table[b, pos // ps], pos % ps] = 1e4
+            vp[table[b, pos // ps], pos % ps] = -1e4
+    got = paged_attention_ref(jnp.asarray(q), jnp.asarray(kp),
+                              jnp.asarray(vp), jnp.asarray(table),
+                              jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))

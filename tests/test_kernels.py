@@ -100,14 +100,16 @@ def test_lut_exactness_on_grid():
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention(sq, skv, h, kvh, d, causal, dtype):
-    if causal and sq != skv:
-        pytest.skip("causal offset only defined for sq == skv here")
+    # causal + sq < skv is the ragged-offset case: queries sit at the
+    # END of kv (attention_ref's tril(k=skv-sq)), which the kernel
+    # expresses as q_offset = skv - sq
+    q_offset = skv - sq if causal else 0
     b = 2
     q = rnd(4, (b, sq, h, d), dtype)
     k = rnd(5, (b, skv, kvh, d), dtype)
     v = rnd(6, (b, skv, kvh, d), dtype)
     got = fa.attention(q, k, v, causal=causal, bq=128, bkv=128,
-                       interpret=True)
+                       q_offset=q_offset, interpret=True)
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)

@@ -1,0 +1,152 @@
+"""Dispatch accounting for the fused engine step.
+
+Pins the economic claim of the fused uber-program at the counter level
+(token-level parity is the fuzzer's job, tests/test_serve_fuzz.py):
+
+* every steady-state mixed step — decode work AND a prefill chunk in
+  flight — is exactly ONE program launch (``n_total_dispatches`` +1,
+  ``n_fused_dispatches`` +1);
+* with ``fused=False`` the engine reproduces the PR 5 two-dispatch
+  counts exactly (pinned trace, pinned numbers);
+* degenerate mixes (prefill-only ramp, decode-only tail) never fuse and
+  match the unfused engine dispatch-for-dispatch;
+* the counter identity holds after any run:
+  ``total = prefill_dispatches + decode_steps + replay_steps - fused``
+  (each fused launch is counted once in total but carries one prefill
+  dispatch and one decode step).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import Request, ServeEngine
+from repro.serve.step import ServePrograms
+
+KEYS = ["n_prefill_dispatches", "n_prefill_chunks", "n_decode_steps",
+        "n_replay_steps", "n_fused_dispatches", "n_total_dispatches"]
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, ServePrograms(model)
+
+
+def _prompts(cfg, n, length, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         size=(length,)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _drive(engine, prompts, gen):
+    """Run to drain; returns (final stats, per-step counter deltas,
+    {rid: tokens})."""
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=gen,
+                              arrival=0.0))
+    deltas, prev, steps = [], {k: 0 for k in KEYS}, 0
+    while engine.step(now=0.0):
+        cur = {k: engine.stats()[k] for k in KEYS}
+        deltas.append({k: cur[k] - prev[k] for k in KEYS})
+        prev = cur
+        steps += 1
+        assert steps < 500
+    stats = engine.stats()
+    ident = (stats["n_prefill_dispatches"] + stats["n_decode_steps"]
+             + stats["n_replay_steps"] - stats["n_fused_dispatches"])
+    assert stats["n_total_dispatches"] == ident, \
+        "counter identity total = prefill + decode + replay - fused"
+    return stats, deltas, {r.rid: list(r.generated)
+                           for r in engine.finished}
+
+
+def _engine(model, params, programs, *, fused, prefill_batch=2):
+    return ServeEngine(model, params, fused=fused, programs=programs,
+                       max_batch=4, n_pages=64, page_size=8,
+                       max_pages_per_seq=8, chunk_size=8,
+                       prefill_batch=prefill_batch,
+                       prefix_sharing=False)
+
+
+def test_stats_expose_dispatch_counters(bundle):
+    _, model, params, programs = bundle
+    s = _engine(model, params, programs, fused=True).stats()
+    assert s["n_fused_dispatches"] == 0
+    assert s["n_total_dispatches"] == 0
+
+
+def test_fused_one_launch_per_steady_state_step(bundle):
+    """Saturating trace (6 reqs x 16-tok prompts, chunk 8, group 2,
+    4 slots): once the batch is warm every mixed step must be a single
+    launch."""
+    cfg, model, params, programs = bundle
+    prompts = _prompts(cfg, 6, 16)
+    eng = _engine(model, params, programs, fused=True)
+    stats, deltas, toks = _drive(eng, prompts, gen=6)
+
+    fused_steps = [d for d in deltas if d["n_fused_dispatches"]]
+    assert len(fused_steps) == 4
+    for d in fused_steps:
+        # one fused launch covers that step's chunk AND decode work
+        assert d["n_fused_dispatches"] == 1
+        assert d["n_decode_steps"] == 1
+        assert d["n_prefill_dispatches"] >= 1
+    # steady state proper (past the first step's admission ramp, which
+    # legitimately runs standalone chunk dispatches while no request
+    # is decoding yet): ONE launch per step, the tentpole claim
+    assert [d["n_total_dispatches"] for d in fused_steps[1:]] \
+        == [1, 1, 1]
+    # full-run pins for this trace
+    assert stats["n_fused_dispatches"] == 4
+    assert stats["n_prefill_dispatches"] == 6
+    assert stats["n_prefill_chunks"] == 12
+    assert stats["n_total_dispatches"] == 14
+    assert set(toks) == set(range(6))
+
+
+def test_unfused_reproduces_two_dispatch_counts(bundle):
+    """Same trace, ``fused=False``: exact PR 5 batched-prefill + PR 3
+    decode counts — 6 chunk dispatches (3 groups x 2 chunks), 11 decode
+    steps, nothing fused, 17 total launches."""
+    cfg, model, params, programs = bundle
+    prompts = _prompts(cfg, 6, 16)
+    eng = _engine(model, params, programs, fused=False)
+    stats, deltas, _ = _drive(eng, prompts, gen=6)
+    assert stats["n_fused_dispatches"] == 0
+    assert stats["n_prefill_dispatches"] == 6
+    assert stats["n_prefill_chunks"] == 12
+    assert stats["n_decode_steps"] == 11
+    assert stats["n_replay_steps"] == 0
+    assert stats["n_total_dispatches"] == 17
+    assert all(d["n_fused_dispatches"] == 0 for d in deltas)
+
+
+def test_fused_and_unfused_stream_identically(bundle):
+    cfg, model, params, programs = bundle
+    prompts = _prompts(cfg, 6, 16)
+    runs = {}
+    for fused in (True, False):
+        eng = _engine(model, params, programs, fused=fused)
+        _, _, runs[fused] = _drive(eng, prompts, gen=6)
+    assert runs[True] == runs[False]
+
+
+def test_degenerate_mixes_match_unfused_dispatch_for_dispatch(bundle):
+    """prefill_batch >= n requests: the whole trace is a prefill-only
+    ramp followed by a decode-only tail — no step is mixed, so the
+    fused engine must fall back to the standalone programs and produce
+    byte-identical counters to the unfused engine."""
+    cfg, model, params, programs = bundle
+    prompts = _prompts(cfg, 3, 16, seed=11)
+    stats = {}
+    for fused in (True, False):
+        eng = _engine(model, params, programs, fused=fused,
+                      prefill_batch=3)
+        stats[fused], _, _ = _drive(eng, prompts, gen=5)
+    assert stats[True]["n_fused_dispatches"] == 0
+    assert stats[True] == stats[False]

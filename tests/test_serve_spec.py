@@ -121,7 +121,9 @@ def test_spec_engine_preemption_token_exact(qwen3):
     prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
                for L in lens]
     oracle = oracles(model, params, prompts, gen)
-    eng = ServeEngine(model, params, max_batch=3, n_pages=13,
+    # n_pages=9 runs the pool dry mid-speculation under the fused step's
+    # one-chunk-per-step admission pacing (13 did under the unfused one).
+    eng = ServeEngine(model, params, max_batch=3, n_pages=9,
                       page_size=8, max_pages_per_seq=8,
                       prefix_sharing=False, spec_k=4)
     done = eng.run([Request(rid=i, prompt=p, max_new_tokens=gen)
