@@ -1,0 +1,239 @@
+"""Elastic fleet vs peak-provisioned static fleet on a sawtooth
+arrival trace.
+
+The datacenter-inference premise (Jouppi et al. 2017): production load
+is bursty, and a fleet provisioned for the peak idles through every
+trough.  The trace here is the canonical sawtooth — bursts of requests
+every ``PERIOD`` steps, each burst a crowd of short interactive
+requests plus a couple of long generations that span the following
+trough.  Two arms serve identical traces:
+
+* **static** — a ``RequestRouter`` over ``PEAK`` replicas, sized so
+  the burst never queues: the classic peak-provisioned fleet.
+* **elastic** — an ``ElasticController`` starting at ONE replica with
+  the same per-replica resources, scaling up to ``PEAK`` on each burst
+  and draining back down through each trough.  Scale-down migrates the
+  trough-spanning long requests onto the survivors: extracted at their
+  confirmed-token frontier and re-admitted through the target's prefix
+  trie, where the shared system prompt is already resident — prompt
+  pages rebuild by **donation** (refcount attach), never a byte copy,
+  and confirmed tokens replay bit-exactly.
+
+Everything is gated on deterministic counters (the synthetic step
+clock drives both arms; wall clock never appears in a gate):
+
+* ``complete_ok``       — zero dropped, duplicated, or reordered
+  requests in both arms (every rid finishes exactly once),
+* ``parity_ok``         — every finished stream in BOTH arms is
+  bitwise-equal to ``greedy_generate``; scaling moves streams, never
+  changes them,
+* ``migration_reuse_ok``— scale-downs migrated live requests, and the
+  migrants re-admitted through trie donation (their re-admission
+  ``shared_tokens`` counters report resident-prefix hits; there is no
+  byte-copy path to miscount),
+* ``elastic_steps_ok``  — the elastic fleet spends FEWER total
+  replica-steps than the static fleet (``n_engine_steps`` fleet-wide:
+  a replica stepping 2 lonely long requests through a trough is the
+  waste elasticity removes).
+
+Both arms share one ``ServePrograms`` compile cache and a warmup at
+the exact pool shapes, so jit compiles never land in the measured
+window.
+
+    PYTHONPATH=src python -m benchmarks.serve_elastic [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import (ElasticController, ElasticPolicy, Request,
+                         RequestRouter, ServeEngine, ServePrograms,
+                         greedy_generate)
+from repro.serve.kv_cache import pages_needed
+
+from .common import fmt_table, save, warm_serve_arms
+
+ARCH = "qwen3-0.6b"
+PAGE, BATCH, CHUNK = 8, 4, 16
+PEAK = 3               # replicas the static fleet provisions for
+PERIOD = 30            # steps between bursts (divisible by SCALE_EVERY)
+SCALE_EVERY = 3        # elastic control-round interval
+PREFIX_LEN = 24        # shared system prompt (every replica's trie
+                       # holds it after one request — migration's
+                       # donation target)
+UNIQUE_LEN = 8
+SHORT_GEN, LONG_GEN = 4, 20   # longs span the trough after the burst
+
+
+def _sawtooth(cfg, n_bursts: int, seed: int = 0):
+    """Bursts of 10 (8 short + 2 long) every PERIOD steps, arrivals
+    spread over the burst's first 6 steps.  The longs TRAIL each burst:
+    they arrive after the short crowd forced the scale-up, so
+    least-loaded dispatch lands them on the freshly-joined replicas —
+    exactly the live work the trough's scale-downs must migrate back
+    onto the survivor."""
+    rng = np.random.default_rng(seed)
+
+    def walk(length):
+        base = rng.integers(0, cfg.vocab_size)
+        drift = rng.integers(0, 17, size=length)
+        return ((base + np.cumsum(drift)) % cfg.vocab_size).astype(np.int32)
+
+    prefix = walk(PREFIX_LEN)
+    reqs = []
+    for b in range(n_bursts):
+        for i in range(10):
+            long_ = i >= 8
+            reqs.append(Request(
+                rid=10 * b + i,
+                prompt=np.concatenate([prefix, walk(UNIQUE_LEN)]),
+                max_new_tokens=LONG_GEN if long_ else SHORT_GEN,
+                arrival=float(b * PERIOD
+                              + (i - 4 if long_ else min(i, 3)))))
+    return reqs
+
+
+def _engine(model, params, programs, n_pages):
+    return ServeEngine(model, params, max_batch=BATCH, n_pages=n_pages,
+                       page_size=PAGE, chunk_size=CHUNK,
+                       max_pages_per_seq=pages_needed(
+                           PREFIX_LEN + UNIQUE_LEN + LONG_GEN, PAGE),
+                       spec_k=0, programs=programs)
+
+
+def _drive(front, reqs):
+    """Synthetic-clock driver (step(now=t), t = 0, 1, 2, ...): both
+    arms see identical arrival raggedness, deterministically."""
+    for r in reqs:
+        front.submit(r)
+    t = 0
+    while True:
+        more = front.step(now=float(t))
+        t += 1
+        assert t < 5000, "fleet failed to drain the trace"
+        if not more and t > max(r.arrival for r in reqs):
+            break
+    return front.stats()
+
+
+def _oracle_streams(model, params, reqs):
+    """Bitwise-expected streams via ``greedy_generate``, batched per
+    generation length (uniform prompt lengths -> two compiles)."""
+    want = {}
+    for gen in (SHORT_GEN, LONG_GEN):
+        group = [r for r in reqs if r.max_new_tokens == gen]
+        toks = np.stack([r.prompt for r in group])
+        out = np.asarray(greedy_generate(
+            model, params, {"tokens": toks}, gen,
+            toks.shape[1] + gen))
+        for r, row in zip(group, out):
+            want[r.rid] = row
+    return want
+
+
+def _check(reqs, finished, want):
+    """complete (exactly once) + parity (bitwise) for one arm."""
+    rids = [r.rid for r in finished]
+    complete = sorted(rids) == sorted(r.rid for r in reqs)
+    parity = complete and all(
+        np.array_equal(np.asarray(r.generated, np.int32), want[r.rid])
+        for r in finished)
+    return complete, parity
+
+
+def run(smoke: bool = False) -> dict:
+    n_bursts = 2 if smoke else 3
+    cfg = configs.get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # per-replica pool: slots' worst case + the shared prefix, with a
+    # little headroom — identical in both arms (elasticity is the only
+    # variable)
+    seq_pages = pages_needed(PREFIX_LEN + UNIQUE_LEN + LONG_GEN, PAGE)
+    n_pages = 2 + BATCH * (seq_pages + 1) + pages_needed(PREFIX_LEN, PAGE)
+    programs = ServePrograms(model)
+
+    # warmup: every context bucket + fused/decode shapes at the arms'
+    # exact pool shape, on a throwaway engine sharing their bundle
+    # (token population disjoint — the measured tries start cold)
+    warm_serve_arms([_engine(model, params, programs, n_pages)],
+                    lambda: _sawtooth(cfg, 1, seed=99))
+
+    reqs = _sawtooth(cfg, n_bursts)
+    want = _oracle_streams(model, params, reqs)
+
+    # static arm: peak-provisioned fixed fleet
+    static_router = RequestRouter(
+        [_engine(model, params, programs, n_pages) for _ in range(PEAK)],
+        policy="least-loaded")
+    st_static = _drive(static_router, _sawtooth(cfg, n_bursts))
+    static_ok, static_parity = _check(reqs, static_router.finished, want)
+
+    # elastic arm: same per-replica resources, fleet tracks demand
+    ctl = ElasticController(
+        RequestRouter([_engine(model, params, programs, n_pages)],
+                      policy="least-loaded"),
+        lambda: _engine(model, params, programs, n_pages),
+        policy=ElasticPolicy(min_replicas=1, max_replicas=PEAK,
+                             scale_interval=SCALE_EVERY,
+                             scale_down_patience=1, alpha=0.8))
+    st_el = _drive(ctl, reqs)
+    elastic_ok, elastic_parity = _check(reqs, ctl.finished, want)
+
+    # migration actually moved live work, and the migrants' re-admission
+    # hit the target's resident prefix (trie donation, refcount-counted)
+    migrated = [r for r in ctl.finished
+                if r.rid in ctl.router.migrated_rids]
+    donated = sum(r.shared_tokens for r in migrated)
+    migration_reuse_ok = (st_el["n_migrations"] > 0
+                          and len(migrated) > 0
+                          and donated >= PAGE)
+
+    steps_static = int(st_static["n_engine_steps"])
+    steps_elastic = int(st_el["n_engine_steps"])
+    rows = [
+        {"fleet": f"static x{PEAK}", "replica_steps": steps_static,
+         "peak": PEAK, "scale_ups": 0, "scale_downs": 0,
+         "migrations": 0,
+         "dispatches": int(st_static["n_total_dispatches"])},
+        {"fleet": f"elastic 1..{PEAK}", "replica_steps": steps_elastic,
+         "peak": int(st_el["n_replicas_peak"]),
+         "scale_ups": int(st_el["n_scale_ups"]),
+         "scale_downs": int(st_el["n_scale_downs"]),
+         "migrations": int(st_el["n_migrations"]),
+         "dispatches": int(st_el["n_total_dispatches"])},
+    ]
+    print(f"\n== Elastic fleet: {n_bursts} bursts x 10 reqs "
+          f"(sawtooth, period {PERIOD}), {PREFIX_LEN}-tok shared "
+          f"prefix, {n_pages} pages/replica ==")
+    print(fmt_table(rows, ["fleet", "replica_steps", "peak",
+                           "scale_ups", "scale_downs", "migrations",
+                           "dispatches"]))
+    ratio = steps_static / max(steps_elastic, 1)
+    print(f"replica-steps ratio {ratio:.2f}x; "
+          f"{donated} prefix tokens donated to "
+          f"{len(migrated)} migrated streams; parity "
+          f"static={static_parity} elastic={elastic_parity}")
+    out = {"rows": rows,
+           "replica_steps_static": steps_static,
+           "replica_steps_elastic": steps_elastic,
+           "replica_steps_ratio": ratio,
+           "migrations": int(st_el["n_migrations"]),
+           "migrated_shared_tokens": int(donated),
+           "complete_ok": static_ok and elastic_ok,
+           "parity_ok": static_parity and elastic_parity,
+           "migration_reuse_ok": migration_reuse_ok,
+           "elastic_steps_ok": steps_elastic < steps_static}
+    save("serve_elastic", out)
+    return out
+
+
+if __name__ == "__main__":
+    out = run(smoke="--smoke" in sys.argv[1:])
+    gates = [v for v in out.values() if isinstance(v, bool)]
+    raise SystemExit(0 if all(gates) else 1)

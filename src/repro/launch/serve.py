@@ -9,7 +9,10 @@ Distributed serving: ``--tp N`` shards every engine over an N-device
 mesh (CPU dev: XLA_FLAGS=--xla_force_host_platform_device_count=N);
 ``--replicas M`` puts M engine replicas behind the request router
 (``--router-policy prefix|least-loaded|round-robin``).  The two
-compose.  ``--stream`` serves the same trace through ``ServeFrontend``
+compose.  ``--max-replicas N`` makes the fleet *elastic* instead:
+replicas scale between ``--min-replicas`` and N with demand (control
+round every ``--scale-interval`` steps), live requests migrating off
+draining replicas with token streams unchanged.  ``--stream`` serves the same trace through ``ServeFrontend``
 instead: per-request token streams, SLO classes (every 4th request is
 interactive), and ``--tenant-weights`` fair sharing.  Engine knobs
 (chunk size, page size, context buckets, prefix sharing) are
@@ -28,7 +31,7 @@ import numpy as np
 from repro import configs
 from repro.data.pipeline import SyntheticPipeline
 from repro.models import build_model
-from repro.serve import Request, RequestRouter, ServeOptions
+from repro.serve import Request, ServeOptions
 from repro.serve.kv_cache import pages_needed
 from repro.serve.step import make_decode_step, make_prefill_step
 
@@ -70,43 +73,49 @@ def serve_trace(opts: ServeOptions, model, params, reqs, *,
 
 
 def _drive(front, reqs, *, realtime: bool):
-    engines = front.replicas if isinstance(front, RequestRouter) \
-        else [front]
+    """Run the trace and aggregate counters through the backend's own
+    ``stats()`` — the ``ServeBackend`` contract every backend (engine,
+    router, elastic controller) implements.  Summing over the live
+    replica list here would silently drop the work of replicas that
+    left an elastic fleet mid-trace; the protocol's stats fold departed
+    replicas in."""
     t0 = time.perf_counter()
     done = front.run(reqs, realtime=realtime)
     dt = time.perf_counter() - t0
+    st = front.stats()
+    # the (possibly routed, possibly elastic) fleet behind the front:
+    # per-engine breakdowns read the live members
+    router = getattr(front, "router", front)
+    engines = getattr(router, "replicas", [front])
     toks = sum(len(r.generated) for r in done)
     ttfts = [r.ttft for r in done if r.ttft is not None
              and r.ttft != float("inf")]
-    drafted = sum(e.n_drafted for e in engines)
-    n_pf_disp = sum(e.n_prefill_dispatches for e in engines)
-    n_pf_chunks = sum(e.n_prefill_chunks for e in engines)
     return {"tokens": toks, "wall_s": dt,
             "tok_per_s": toks / max(dt, 1e-9),
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
-            "decode_steps": sum(e.n_decode_steps for e in engines),
-            "fused_dispatches": sum(e.n_fused_dispatches
-                                    for e in engines),
-            "total_dispatches": sum(e.n_total_dispatches
-                                    for e in engines),
-            "prefill_chunks": n_pf_chunks,
-            "prefill_dispatches": n_pf_disp,
-            "prefill_rows_mean": n_pf_chunks / max(n_pf_disp, 1),
+            "decode_steps": st["n_decode_steps"],
+            "fused_dispatches": st["n_fused_dispatches"],
+            "total_dispatches": st["n_total_dispatches"],
+            "prefill_chunks": st["n_prefill_chunks"],
+            "prefill_dispatches": st["n_prefill_dispatches"],
+            "prefill_rows_mean": st["prefill_rows_mean"],
             "engine_stats": [e.stats() for e in engines],
-            "shared_tokens": sum(e.cache.n_shared_tokens
-                                 for e in engines),
-            "cow_copies": sum(e.cache.n_cow for e in engines),
-            "spec_rounds": sum(e.n_spec_rounds for e in engines),
-            "drafted": drafted,
-            "draft_accepted": sum(e.n_draft_accepted for e in engines),
-            "accept_rate": sum(e.n_draft_accepted for e in engines)
-            / max(drafted, 1),
-            "dispatched": (front.n_dispatched
-                           if isinstance(front, RequestRouter)
-                           else [len(done)]),
-            "affinity_hits": (front.n_affinity_hits
-                              if isinstance(front, RequestRouter)
-                              else 0)}
+            "shared_tokens": st["n_shared_tokens"],
+            "cow_copies": st["n_cow"],
+            "spec_rounds": st["n_spec_rounds"],
+            "drafted": st["n_drafted"],
+            "draft_accepted": st["n_draft_accepted"],
+            "accept_rate": st["n_draft_accepted"]
+            / max(st["n_drafted"], 1),
+            "dispatched": list(getattr(router, "n_dispatched",
+                                       [len(done)])),
+            "affinity_hits": int(st.get("n_affinity_hits", 0)),
+            # elastic-fleet counters (0 on fixed backends)
+            "replicas_peak": int(st.get("n_replicas_peak",
+                                        len(engines))),
+            "scale_ups": int(st.get("n_scale_ups", 0)),
+            "scale_downs": int(st.get("n_scale_downs", 0)),
+            "migrations": int(st.get("n_migrations", 0))}
 
 
 def run_engine(model, params, reqs, *, batch, page_size, n_pages,
@@ -130,9 +139,7 @@ def run_engine(model, params, reqs, *, batch, page_size, n_pages,
     if drafter_factory is not None and spec_k:
         # the shim predates ServeOptions.draft_config: splice the
         # caller's factory into the already-built backend
-        engines = front.replicas if isinstance(front, RequestRouter) \
-            else [front]
-        for e in engines:
+        for e in getattr(front, "replicas", [front]):
             e.drafter = drafter_factory()
     return _drive(front, reqs, realtime=realtime)
 
@@ -252,11 +259,18 @@ def main():
                  f"({stats['draft_accepted']}/{stats['drafted']} drafts), "
                  if opts.spec_k else "")
     dist_note = ""
-    if opts.tp > 1 or opts.replicas > 1:
+    if opts.tp > 1 or opts.replicas > 1 or opts.max_replicas > 0:
         dist_note = (f"tp={opts.tp} x {opts.replicas} replica(s) "
                      f"[{opts.router_policy}] "
                      f"dispatched {stats['dispatched']}, "
                      f"{stats['affinity_hits']} affinity hits, ")
+    if opts.max_replicas > 0:
+        dist_note += (f"elastic {opts.min_replicas}.."
+                      f"{opts.max_replicas} (peak "
+                      f"{stats['replicas_peak']}, "
+                      f"{stats['scale_ups']} up / "
+                      f"{stats['scale_downs']} down, "
+                      f"{stats['migrations']} migrations), ")
     print(f"{args.requests} requests ({args.shared_prefix}+"
           f"{args.prompt_len}+{args.gen} tok) "
           f"batch={opts.batch} pages={opts.n_pages}x{opts.page_size}: "

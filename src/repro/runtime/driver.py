@@ -18,7 +18,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 
 from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from .straggler import StragglerMonitor
+from ..serve.elastic import StragglerMonitor
 
 __all__ = ["TrainDriver", "DriverConfig", "StepEvent"]
 

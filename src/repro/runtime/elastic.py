@@ -1,36 +1,9 @@
-"""Elastic-scaling policy: pick a new mesh after membership changes.
-
-Given the surviving device count and the parallelism constraints of the
-job (model-axis width must divide the layer shardings it was compiled
-for; data axis absorbs the rest), returns the largest legal mesh.  The
-checkpoint layer restores onto whatever mesh this returns (full-array
-manifests are topology-free).
-"""
+"""Deprecated location: the elasticity policy moved to
+``repro.serve.elastic`` when the serving fleet became elastic (the
+mesh planner is the training-side half of the same story).  This shim
+re-exports it so old imports keep working."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from ..serve.elastic import plan_elastic_mesh
 
 __all__ = ["plan_elastic_mesh"]
-
-
-def plan_elastic_mesh(n_devices: int, *, model_parallel: int,
-                      min_data: int = 1,
-                      pods: int = 1) -> Optional[Tuple[Tuple[int, ...],
-                                                       Tuple[str, ...]]]:
-    """Largest (shape, axes) using <= n_devices.
-
-    Keeps ``model_parallel`` fixed (param shardings stay valid) and
-    shrinks the data axis; drops to fewer pods before shrinking data
-    below ``min_data``.  Returns None when no legal mesh exists.
-    """
-    if model_parallel <= 0 or n_devices < model_parallel * min_data:
-        return None
-    for p in range(pods, 0, -1):
-        per_pod = n_devices // p
-        data = per_pod // model_parallel
-        if data >= min_data:
-            if p > 1:
-                return ((p, data, model_parallel),
-                        ("pod", "data", "model"))
-            return ((data, model_parallel), ("data", "model"))
-    return None

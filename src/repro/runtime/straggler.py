@@ -1,47 +1,8 @@
-"""Straggler detection: per-step wall-time EMA with an outlier policy.
-
-On a real pod the mitigation is re-issuing the slow host's shard /
-evicting the host; here the monitor emits the decision so the driver
-(and tests) can act on it.  Detection is the same either way: a step
-that exceeds ``threshold x EMA`` marks its slowest participant.
-"""
+"""Deprecated location: the straggler monitor moved to
+``repro.serve.elastic`` with the rest of the fleet-elasticity
+machinery.  This shim re-exports it so old imports keep working."""
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+from ..serve.elastic import StragglerEvent, StragglerMonitor
 
-__all__ = ["StragglerMonitor"]
-
-
-@dataclasses.dataclass
-class StragglerEvent:
-    step: int
-    step_time: float
-    ema: float
-    ratio: float
-
-
-class StragglerMonitor:
-    def __init__(self, threshold: float = 2.5, alpha: float = 0.1,
-                 warmup: int = 5):
-        self.threshold = threshold
-        self.alpha = alpha
-        self.warmup = warmup
-        self.ema: Optional[float] = None
-        self.n = 0
-        self.events: List[StragglerEvent] = []
-
-    def observe(self, step: int, step_time: float) -> Optional[StragglerEvent]:
-        self.n += 1
-        if self.ema is None:
-            self.ema = step_time
-            return None
-        event = None
-        if self.n > self.warmup and step_time > self.threshold * self.ema:
-            event = StragglerEvent(step, step_time, self.ema,
-                                   step_time / self.ema)
-            self.events.append(event)
-            # do not poison the EMA with the outlier
-            return event
-        self.ema = (1 - self.alpha) * self.ema + self.alpha * step_time
-        return event
+__all__ = ["StragglerMonitor", "StragglerEvent"]

@@ -1,4 +1,5 @@
 from .backend import ServeBackend, StreamEvent  # noqa: F401
+from .elastic import ElasticController, ElasticPolicy  # noqa: F401
 from .frontend import ServeFrontend, TenantPolicy, TokenStream  # noqa: F401
 from .kv_cache import PagedKVCache  # noqa: F401
 from .options import ServeOptions  # noqa: F401

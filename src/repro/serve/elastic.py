@@ -1,0 +1,330 @@
+"""Elastic fleet control: demand-driven replica scaling over the
+request router.
+
+RISC-NN's scaling argument — a fleet of simple units beats one
+monolithic engine because units can be added and removed to track the
+workload — lands here as the serving control loop: production load is
+bursty (the TPU in-datacenter analysis), and a fleet provisioned for
+peak idles through every trough.  ``ElasticController`` wraps a
+``RequestRouter`` and resizes its replica set live:
+
+* **Demand signal.**  Every ``scale_interval`` steps the controller
+  reads the router's queue depth (arrived requests only) plus the
+  fleet's in-flight count — the requests that *want* a slot right now.
+  The target replica count is the smallest fleet whose batch slots
+  cover that demand (``target_load`` scales how hot a replica should
+  run), clamped to ``[min_replicas, max_replicas]``.
+* **Scale up fast.**  A burst raises the *instant* signal and replicas
+  join the same control round — a joining replica is just a fresh
+  engine on the shared ``ServePrograms`` bundle (one compile cache per
+  fleet), so the join costs allocator state, not a recompile, and it
+  takes dispatches on the next router step.
+* **Scale down with patience.**  Retirement uses the smoothed signal
+  (EMA, never below the instant value) and waits
+  ``scale_down_patience`` consecutive low rounds before draining ONE
+  replica — hysteresis so a sawtooth trough must persist before the
+  fleet shrinks, and shrinkage is gradual.  The victim is the live
+  replica with the least outstanding work (ties: the coldest prefix
+  trie — ``PrefixCache.resident_tokens`` — so the fleet keeps its
+  warmest caches).
+* **Graceful drain, live migration.**  ``RequestRouter.drain`` marks
+  the victim; from that instant it takes no new admissions, and the
+  next router step *migrates* every request it still holds — extracted
+  at the confirmed-token frontier (``ServeEngine.extract_all``) and
+  re-queued at the router head, oldest first.  Re-admission on the
+  surviving replicas goes through the normal trie lookup, so a
+  migrated request whose shared prefix is resident on the target
+  rebuilds its prompt pages by **donation** (a refcount attach), and
+  its confirmed tokens replay through the target's decode program —
+  the resumed stream is bitwise the stream a static fleet would have
+  produced.  No request is ever dropped or reordered by scaling.
+
+The controller implements the same ``ServeBackend`` protocol as the
+engine and the router — a front-end (serve/frontend.py) cannot tell a
+fixed fleet from an elastic one.  Its ``capacity`` deliberately
+reports the fleet's *potential* (``max_replicas`` × per-replica
+slots), not its current size: a front-end that throttles at current
+capacity would hide the very demand the controller scales on.
+
+This module also absorbs the two seed-era elasticity utilities that
+predate the serve stack: ``plan_elastic_mesh`` (the training-side
+policy — pick the largest legal mesh after device-membership changes)
+and ``StragglerMonitor`` (per-step wall-time EMA outlier detection,
+used by the training driver).  Both are re-exported from their old
+``repro.runtime`` homes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .backend import StreamEvent
+from .router import RequestRouter
+from .scheduler import Request, ServeEngine
+
+__all__ = ["ElasticController", "ElasticPolicy",
+           "plan_elastic_mesh", "StragglerMonitor", "StragglerEvent"]
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """Knobs of the demand-driven scaling loop (see module docstring
+    for the loop itself)."""
+    min_replicas: int = 1
+    max_replicas: int = 4
+    scale_interval: int = 8      # steps between control rounds
+    target_load: float = 1.0     # demand per slot a replica should carry
+    scale_down_patience: int = 2  # low rounds before draining one
+    alpha: float = 0.5           # demand-EMA smoothing (scale-down only)
+
+    def __post_init__(self):
+        if not 1 <= self.min_replicas <= self.max_replicas:
+            raise ValueError(
+                f"need 1 <= min_replicas <= max_replicas, got "
+                f"{self.min_replicas}..{self.max_replicas}")
+        if self.scale_interval < 1:
+            raise ValueError("scale_interval must be >= 1")
+        if self.target_load <= 0:
+            raise ValueError("target_load must be > 0")
+
+
+class ElasticController:
+    """A ``ServeBackend`` that owns a router and resizes its fleet.
+
+    ``replica_factory`` builds one fresh ``ServeEngine`` per call;
+    build it over a shared ``ServePrograms`` bundle so joins reuse the
+    fleet's compile cache (``ServeOptions.build`` does).
+    """
+
+    def __init__(self, router: RequestRouter,
+                 replica_factory: Callable[[], ServeEngine], *,
+                 policy: Optional[ElasticPolicy] = None):
+        self.router = router
+        self.factory = replica_factory
+        self.policy = policy or ElasticPolicy()
+        if len(router.replicas) > self.policy.max_replicas:
+            raise ValueError(
+                f"router starts with {len(router.replicas)} replicas; "
+                f"policy caps the fleet at {self.policy.max_replicas}")
+        # fleets are homogeneous (one factory): per-replica slots are a
+        # constant of the fleet, read off the first member
+        self._slots = router.replicas[0].max_batch
+        self._tick = 0
+        self._ema: Optional[float] = None
+        self._low_rounds = 0
+        self.n_scale_ups = 0
+        self.n_scale_downs = 0
+
+    # -------------------------------------------------------- delegation
+    @property
+    def replicas(self) -> List[ServeEngine]:
+        return self.router.replicas
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.router.finished
+
+    @property
+    def n_inflight(self) -> int:
+        return self.router.n_inflight
+
+    @property
+    def capacity(self) -> int:
+        """The fleet's POTENTIAL concurrency (``max_replicas`` × batch
+        slots), not its current size: front-ends throttle submission at
+        ``capacity``, and demand they withhold is demand the control
+        loop cannot see — the elastic fleet must be offered the load it
+        is supposed to scale into."""
+        return self.policy.max_replicas * self._slots
+
+    def check_admissible(self, req: Request) -> None:
+        self.router.check_admissible(req)
+
+    def submit(self, req: Request) -> None:
+        self.router.submit(req)
+
+    def drain_events(self) -> List[StreamEvent]:
+        return self.router.drain_events()
+
+    def extract(self, rid: int) -> Optional[Request]:
+        return self.router.extract(rid)
+
+    def cancel(self, rid: int) -> bool:
+        return self.router.cancel(rid)
+
+    # ----------------------------------------------------------- control
+    def demand(self, now: float = float("inf")) -> int:
+        """Requests that want a slot right now: arrived-but-queued plus
+        everything already on a replica."""
+        queued = sum(1 for r in self.router.queue if r.arrival <= now)
+        return queued + sum(e.n_inflight for e in self.router.replicas)
+
+    def _target(self, demand: float) -> int:
+        per = self._slots * self.policy.target_load
+        want = math.ceil(demand / per)
+        return max(self.policy.min_replicas,
+                   min(self.policy.max_replicas, want))
+
+    def _victim(self) -> Optional[int]:
+        """Index of the live replica to retire: least outstanding
+        tokens, then the coldest prefix trie — keep the warm caches."""
+        live = [i for i in range(len(self.router.replicas))
+                if not self.router.is_draining(i)]
+        if len(live) <= 1:
+            return None
+
+        def score(i: int) -> Tuple[int, int, int]:
+            eng = self.router.replicas[i]
+            warmth = (eng.cache.prefix.resident_tokens()
+                      if eng.cache.prefix is not None else 0)
+            return (self.router._outstanding_tokens(i), warmth, i)
+        return min(live, key=score)
+
+    def _control(self, now: float) -> None:
+        demand = self.demand(now)
+        self._ema = (demand if self._ema is None else
+                     self.policy.alpha * demand
+                     + (1 - self.policy.alpha) * self._ema)
+        live = self.router.n_live
+        # scale up on the INSTANT signal: bursts must not wait out the
+        # EMA.  All missing replicas join this round.
+        up = self._target(demand)
+        for _ in range(max(0, up - live)):
+            self.router.add_replica(self.factory())
+            self.n_scale_ups += 1
+        live = self.router.n_live
+        # scale down on the smoothed signal (never below instant: a
+        # trough that already ended is not a trough), with patience —
+        # and at most one drain per control round, so shrinkage is
+        # gradual and each drain's migration settles before the next.
+        down = self._target(max(self._ema, demand))
+        if down < live:
+            self._low_rounds += 1
+            if self._low_rounds >= self.policy.scale_down_patience:
+                victim = self._victim()
+                if victim is not None:
+                    self.router.drain(victim)
+                    self.n_scale_downs += 1
+                self._low_rounds = 0
+        else:
+            self._low_rounds = 0
+
+    # -------------------------------------------------------------- step
+    def step(self, now: float = float("inf")) -> bool:
+        """One fleet iteration: run the control loop every
+        ``scale_interval``-th call, then one router step (which
+        executes any drain the control round just marked).  Returns
+        True while anything is queued or in flight."""
+        if self._tick % self.policy.scale_interval == 0:
+            self._control(now)
+        self._tick += 1
+        return self.router.step(now)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, float]:
+        """The router's fleet-wide counters (departed replicas
+        included) plus the controller's scaling history."""
+        agg = self.router.stats()
+        agg["n_scale_ups"] = self.n_scale_ups
+        agg["n_scale_downs"] = self.n_scale_downs
+        agg["n_control_rounds"] = (self._tick
+                                   + self.policy.scale_interval - 1) \
+            // self.policy.scale_interval
+        return agg
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: List[Request], *,
+            realtime: bool = False) -> List[Request]:
+        """Drive to completion; returns the requests completed by THIS
+        call in completion order (mirrors ``RequestRouter.run``, with
+        the control loop in the driving seat)."""
+        first = len(self.finished)
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while True:
+            now = (time.perf_counter() - t0) if realtime else float("inf")
+            if not self.step(now=now):
+                break
+            if realtime and self.router.queue \
+                    and not any(e.n_inflight for e in self.replicas):
+                time.sleep(max(0.0, self.router.queue[0].arrival
+                               - (time.perf_counter() - t0)))
+        done = list(self.finished[first:])
+        done.sort(key=lambda r: (r.finish_time, r.rid))
+        return done
+
+
+# --------------------------------------------------------------------
+# Seed-era elasticity utilities, absorbed from repro.runtime (their old
+# modules re-export these; the training driver still uses both).
+# --------------------------------------------------------------------
+
+def plan_elastic_mesh(n_devices: int, *, model_parallel: int,
+                      min_data: int = 1,
+                      pods: int = 1) -> Optional[Tuple[Tuple[int, ...],
+                                                       Tuple[str, ...]]]:
+    """Largest (shape, axes) mesh using <= n_devices after a
+    device-membership change — the training-side elasticity policy.
+
+    Keeps ``model_parallel`` fixed (param shardings stay valid) and
+    shrinks the data axis; drops to fewer pods before shrinking data
+    below ``min_data``.  Returns None when no legal mesh exists.  The
+    checkpoint layer restores onto whatever mesh this returns
+    (full-array manifests are topology-free).
+    """
+    if model_parallel <= 0 or n_devices < model_parallel * min_data:
+        return None
+    for p in range(pods, 0, -1):
+        per_pod = n_devices // p
+        data = per_pod // model_parallel
+        if data >= min_data:
+            if p > 1:
+                return ((p, data, model_parallel),
+                        ("pod", "data", "model"))
+            return ((data, model_parallel), ("data", "model"))
+    return None
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    ema: float
+    ratio: float
+
+
+class StragglerMonitor:
+    """Straggler detection: per-step wall-time EMA with an outlier
+    policy.  On a real pod the mitigation is re-issuing the slow host's
+    shard / evicting the host; here the monitor emits the decision so
+    the driver (and tests) can act on it.  A step that exceeds
+    ``threshold x EMA`` (after ``warmup`` steps) marks its slowest
+    participant; the outlier never poisons the EMA."""
+
+    def __init__(self, threshold: float = 2.5, alpha: float = 0.1,
+                 warmup: int = 5):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.events: List[StragglerEvent] = []
+
+    def observe(self, step: int,
+                step_time: float) -> Optional[StragglerEvent]:
+        self.n += 1
+        if self.ema is None:
+            self.ema = step_time
+            return None
+        event = None
+        if self.n > self.warmup and step_time > self.threshold * self.ema:
+            event = StragglerEvent(step, step_time, self.ema,
+                                   step_time / self.ema)
+            self.events.append(event)
+            # do not poison the EMA with the outlier
+            return event
+        self.ema = (1 - self.alpha) * self.ema + self.alpha * step_time
+        return event

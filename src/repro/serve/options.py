@@ -56,6 +56,12 @@ class ServeOptions:
     tp: int = 1
     replicas: int = 1
     router_policy: str = "prefix"
+    # elastic fleet (max_replicas > 0 enables the controller: the
+    # fleet starts at min_replicas and scales with demand; 0 keeps the
+    # fixed --replicas fleet)
+    min_replicas: int = 1
+    max_replicas: int = 0
+    scale_interval: int = 8
     # front-end
     stream: bool = False
     tenant_weights: Dict[str, float] = dataclasses.field(
@@ -110,6 +116,19 @@ class ServeOptions:
         ap.add_argument("--replicas", type=int, default=1,
                         help="engine replicas behind the request router "
                              "(each gets its own --n-pages pool)")
+        ap.add_argument("--min-replicas", type=int, default=1,
+                        help="elastic-fleet floor (and initial size); "
+                             "only read when --max-replicas > 0")
+        ap.add_argument("--max-replicas", type=int, default=0,
+                        help="> 0 makes the fleet ELASTIC: a control "
+                             "loop scales replicas between "
+                             "--min-replicas and this with demand, "
+                             "migrating live requests off draining "
+                             "replicas (token streams unchanged); 0 "
+                             "keeps the fixed --replicas fleet")
+        ap.add_argument("--scale-interval", type=int, default=8,
+                        help="engine steps between elastic control "
+                             "rounds")
         ap.add_argument("--router-policy", type=str, default="prefix",
                         choices=list(ROUTER_POLICIES),
                         help="replica selection: prefix affinity "
@@ -146,6 +165,9 @@ class ServeOptions:
             tp=args.tp,
             replicas=args.replicas,
             router_policy=args.router_policy,
+            min_replicas=getattr(args, "min_replicas", 1),
+            max_replicas=getattr(args, "max_replicas", 0),
+            scale_interval=getattr(args, "scale_interval", 8),
             stream=getattr(args, "stream", False),
             tenant_weights=_parse_weights(
                 getattr(args, "tenant_weights", "")),
@@ -193,10 +215,12 @@ class ServeOptions:
     def build(self, model, params, *, smoke: bool = False,
               programs=None):
         """Construct the backend this options value describes: one
-        ``ServeEngine`` (tensor-parallel when ``tp > 1``) or a
-        ``RequestRouter`` over ``replicas`` engines.  All replicas
-        share ONE program bundle (one compile cache regardless of
-        fleet size)."""
+        ``ServeEngine`` (tensor-parallel when ``tp > 1``), a
+        ``RequestRouter`` over ``replicas`` engines, or — when
+        ``max_replicas > 0`` — an ``ElasticController`` whose fleet
+        tracks demand.  All replicas, including ones the controller
+        adds later, share ONE program bundle (one compile cache
+        regardless of fleet size)."""
         if self.n_pages <= 0:
             raise ValueError("n_pages unresolved: pass it explicitly or "
                              "call sized_for(reqs) first")
@@ -224,6 +248,19 @@ class ServeOptions:
                 fused=self.fused,
                 programs=programs)
 
+        if self.max_replicas > 0:
+            # elastic fleet: start at the floor, let demand grow it.
+            # Every replica the controller ever builds comes from the
+            # same mk() closure, so joins share the compile cache.
+            from .elastic import ElasticController, ElasticPolicy
+            lo = max(1, self.min_replicas)
+            policy = ElasticPolicy(
+                min_replicas=lo,
+                max_replicas=max(lo, self.max_replicas),
+                scale_interval=self.scale_interval)
+            router = RequestRouter([mk() for _ in range(lo)],
+                                   policy=self.router_policy)
+            return ElasticController(router, mk, policy=policy)
         if self.replicas > 1:
             return RequestRouter([mk() for _ in range(self.replicas)],
                                  policy=self.router_policy)

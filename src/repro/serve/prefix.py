@@ -221,6 +221,22 @@ class PrefixCache:
         return out
 
     # ------------------------------------------------------- inspection
+    def resident_tokens(self) -> int:
+        """Total prompt tokens the trie holds KV for (sum of node
+        runs).  An observer-side warmth measure: the elastic
+        controller's scale-down victim scoring (serve/elastic.py)
+        prefers retiring the replica whose trie would be the smallest
+        loss — like ``probe``, reading it must not perturb LRU state."""
+        total = 0
+
+        def walk(node):
+            nonlocal total
+            for ch in node.children.values():
+                total += ch.n_tokens
+                walk(ch)
+        walk(self.root)
+        return total
+
     def pages(self) -> List[int]:
         out = []
 

@@ -1,5 +1,5 @@
 """Multi-replica request router: one front-end queue over N
-independent serve-engine replicas.
+independent serve-engine replicas — N now *elastic*.
 
 This is the scale-*out* half of distributed serving (serve/parallel.py
 is the scale-*up* half): replicas are whole engines — each with its
@@ -33,6 +33,29 @@ queue — requests are never dropped and never reordered (FIFO; a
 held head blocks later requests, which keeps arrival order fair and
 routing deterministic).
 
+**Elastic membership.**  The fleet is no longer fixed at construction:
+``add_replica`` joins a fresh engine mid-trace, and ``drain`` retires
+one *gracefully* — the draining replica takes no new admissions, and
+on the next ``step`` every request it still holds (queued, prefilling,
+or decoding) is **migrated**: extracted at its confirmed-token
+frontier (``ServeEngine.extract_all`` — the same preempt-to-host
+machinery ``extract`` uses) and re-queued at the *head* of the router
+queue, oldest first, ahead of never-admitted arrivals.  Re-admission
+on the target replica goes through the normal path: the prompt is
+looked up in the target's prefix trie, so a migrated request whose
+shared prefix is already resident there rebuilds its prompt pages via
+**trie donation** — a refcount attach — rather than any cross-replica
+byte copy, and its confirmed tokens replay through the target's decode
+program (exact recompute-replay), so the resumed stream is bitwise the
+stream it would have produced had it never moved.  Once empty, the
+replica leaves the fleet; its engine counters are folded into
+``stats()`` forever (departure never un-counts work — the
+``n_total_dispatches = prefill + decode + replay − fused`` identity
+holds fleet-wide across any churn), its finished requests stay in the
+router's completion log, and its undrained stream events are held for
+the next ``drain_events``.  The demand-driven control loop that
+decides *when* to scale lives one layer up (serve/elastic.py).
+
 **Why the aggregate scales.**  The router's throughput story is the
 TPU-paper memory argument one level up: a single replica's page pool
 bounds how many distinct hot prefixes stay resident — a workload
@@ -47,13 +70,14 @@ stream is produced.
 The router implements the same ``ServeBackend`` protocol as a single
 engine (serve/backend.py): submit/step/run/stats plus the streaming
 face (``drain_events``) and mid-stream removal (``extract``/
-``cancel``) — a front-end cannot tell one replica from a fleet.
+``cancel``) — a front-end cannot tell one replica from a fleet, or a
+fixed fleet from an elastic one.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .backend import StreamEvent
 from .scheduler import Request, ServeEngine
@@ -61,6 +85,10 @@ from .scheduler import Request, ServeEngine
 __all__ = ["RequestRouter", "ROUTER_POLICIES"]
 
 ROUTER_POLICIES = ("prefix", "least-loaded", "round-robin")
+
+# engine counters that stay meaningful summed across replicas (the
+# ratio fields are recomputed from these after the sum)
+_RATIO_FIELDS = ("prefill_rows_mean",)
 
 
 class RequestRouter:
@@ -73,7 +101,6 @@ class RequestRouter:
         if policy not in ROUTER_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {ROUTER_POLICIES}")
-        self.replicas = list(replicas)
         self.policy = policy
         self.max_inflight = (max_inflight if max_inflight is not None
                              else 2 * max(e.max_batch for e in replicas))
@@ -81,28 +108,153 @@ class RequestRouter:
             raise ValueError("max_inflight must be >= 1")
         self.queue: deque[Request] = deque()
         self._rr = 0                     # round-robin cursor
-        # replica -> LRU-ordered page-run keys of recently dispatched
-        # prompts (before their pages can appear in the trie)
-        self._recent: List[Dict[Tuple[int, ...], None]] = [
-            {} for _ in replicas]
         self._recent_cap = affinity_record
+        # elastic membership: every replica gets a stable id at join
+        # (list indices shift as replicas leave; ids never do)
+        self.replicas: List[ServeEngine] = []
+        self._ids: List[int] = []
+        self._next_id = 0
+        self._draining: set = set()            # replica ids mid-drain
+        # replica id -> LRU-ordered page-run keys of recently dispatched
+        # prompts (before their pages can appear in the trie)
+        self._recent: Dict[int, Dict[Tuple[int, ...], None]] = {}
+        self._harvested: Dict[int, int] = {}   # id -> finished harvested
+        self.n_dispatched: List[int] = []      # parallel to replicas
+        # completion log: finished requests in completion order,
+        # harvested every step so they survive replica departure
+        self.completed: List[Request] = []
+        self._pending_events: List[StreamEvent] = []
+        # counters of work done by replicas that have LEFT the fleet —
+        # stats() folds these in so dispatch-count identities hold
+        # across arbitrary membership churn
+        self._departed_stats: Dict[str, float] = {}
+        self._departed_routed = 0
+        self.n_joined = 0
+        self.n_departed = 0
+        self.n_replicas_peak = 0
+        self.n_migrations = 0            # requests moved by a drain
+        self.n_migrated_tokens = 0       # confirmed tokens they carried
+        self.migrated_rids: set = set()
         # stats
-        self.n_dispatched = [0] * len(replicas)
         self.n_affinity_hits = 0         # dispatches with affinity > 0
+        for eng in replicas:
+            self.add_replica(eng)
+
+    # ------------------------------------------------------- membership
+    def add_replica(self, engine: ServeEngine) -> int:
+        """Join ``engine`` to the fleet (it starts taking dispatches on
+        the next ``step``).  Returns the replica's stable id.  All
+        replicas built from one ``ServePrograms`` bundle share a
+        compile cache, so a join costs allocator state, not a trace."""
+        rid = self._next_id
+        self._next_id += 1
+        self.replicas.append(engine)
+        self._ids.append(rid)
+        self._recent[rid] = {}
+        self._harvested[rid] = len(engine.finished)
+        self.n_dispatched.append(0)
+        self.n_joined += 1
+        self.n_replicas_peak = max(self.n_replicas_peak,
+                                   self.n_live)
+        return rid
+
+    def _index_of(self, replica: Union[int, ServeEngine]) -> int:
+        if isinstance(replica, ServeEngine):
+            for i, e in enumerate(self.replicas):
+                if e is replica:
+                    return i
+            raise ValueError("engine is not in this fleet")
+        if not 0 <= replica < len(self.replicas):
+            raise ValueError(f"no replica at index {replica}")
+        return replica
+
+    @property
+    def n_live(self) -> int:
+        """Replicas accepting new admissions (not draining)."""
+        return len(self.replicas) - len(self._draining)
+
+    def is_draining(self, replica: Union[int, ServeEngine]) -> bool:
+        return self._ids[self._index_of(replica)] in self._draining
+
+    def drain(self, replica: Union[int, ServeEngine]) -> None:
+        """Begin graceful scale-down of one replica: it takes no new
+        admissions from this call on, and the next ``step`` migrates
+        every request it still holds (extract at the confirmed-token
+        frontier, re-queue at the router head) before removing it from
+        the fleet.  Confirmed tokens survive; re-admission elsewhere
+        resumes each stream token-exactly.  Idempotent per replica;
+        refuses to drain the last live replica (the fleet must always
+        be able to admit)."""
+        i = self._index_of(replica)
+        rid = self._ids[i]
+        if rid in self._draining:
+            return
+        if self.n_live <= 1:
+            raise ValueError("cannot drain the last live replica")
+        self._draining.add(rid)
+
+    def _remove_replica(self, i: int) -> None:
+        """Drop an (empty) replica from the fleet, preserving its
+        history: finished requests were harvested, engine counters fold
+        into the departed-stats accumulator, undrained stream events
+        queue for the next ``drain_events``."""
+        eng = self.replicas[i]
+        assert eng.n_inflight == 0, "removing a replica with live work"
+        self._harvest(i)
+        self._pending_events.extend(eng.drain_events())
+        for k, v in eng.stats().items():
+            if k not in _RATIO_FIELDS:
+                self._departed_stats[k] = \
+                    self._departed_stats.get(k, 0) + v
+        self._departed_routed += self.n_dispatched[i]
+        rid = self._ids[i]
+        self._draining.discard(rid)
+        self._recent.pop(rid)
+        self._harvested.pop(rid)
+        del self.replicas[i]
+        del self._ids[i]
+        del self.n_dispatched[i]
+        self.n_departed += 1
+        if self._rr > i:
+            self._rr -= 1
+        self._rr = self._rr % max(len(self.replicas), 1)
+
+    def _pump_drains(self) -> None:
+        """Execute pending drains: migrate every request a draining
+        replica still holds to the head of the router queue (oldest
+        first, ahead of never-admitted arrivals — they have already
+        waited once), then retire the empty replica."""
+        if not self._draining:
+            return
+        migrated: List[Request] = []
+        for i in [j for j in range(len(self.replicas) - 1, -1, -1)
+                  if self._ids[j] in self._draining]:
+            eng = self.replicas[i]
+            reqs = eng.extract_all()
+            self.n_migrations += len(reqs)
+            for r in reqs:
+                self.n_migrated_tokens += len(r.generated)
+                self.migrated_rids.add(r.rid)
+            migrated.extend(reqs)
+            self._remove_replica(i)
+        migrated.sort(key=lambda r: (r.arrival, r.rid))
+        self.queue.extendleft(reversed(migrated))
 
     # ---------------------------------------------------------- frontend
     def check_admissible(self, req: Request) -> None:
-        """Raise ValueError if NO replica could ever admit ``req``.
+        """Raise ValueError if NO live replica could ever admit ``req``.
         Heterogeneous fleets are fine — dispatch only considers
         replicas that can take the request."""
         err = None
-        for eng in self.replicas:
+        for i, eng in enumerate(self.replicas):
+            if self._ids[i] in self._draining:
+                continue
             try:
                 eng.check_admissible(req)
                 return
             except ValueError as e:
                 err = e
-        raise err
+        raise err or ValueError("no live replica to admit the request")
 
     def submit(self, req: Request) -> None:
         """Queue a request (see ``check_admissible`` for rejection)."""
@@ -116,17 +268,29 @@ class RequestRouter:
     @property
     def capacity(self) -> int:
         """Aggregate concurrently-servable requests: the sum of the
-        replicas' batch slots (per-replica ``max_inflight`` only pads
-        each replica's internal queue beyond this)."""
-        return sum(e.max_batch for e in self.replicas)
+        *live* replicas' batch slots (draining replicas are on their
+        way out; per-replica ``max_inflight`` only pads each replica's
+        internal queue beyond this)."""
+        return sum(e.max_batch for i, e in enumerate(self.replicas)
+                   if self._ids[i] not in self._draining)
+
+    @property
+    def finished(self) -> List[Request]:
+        """Completion log across the whole fleet's history — finished
+        requests of departed replicas included (same reading as
+        ``ServeEngine.finished``)."""
+        self._harvest_all()
+        return self.completed
 
     def drain_events(self) -> List[StreamEvent]:
-        """Confirmed-token events since the last drain, replica-major.
-        Per-stream order is exact (a request lives on one replica);
+        """Confirmed-token events since the last drain, replica-major
+        (events held from departed replicas first).  Per-stream order
+        is exact (a request lives on one replica at a time);
         cross-stream interleaving is already only step-granular on a
         single engine, so replica-major order changes nothing a
         streaming consumer can observe."""
-        ev: List[StreamEvent] = []
+        ev: List[StreamEvent] = self._pending_events
+        self._pending_events = []
         for eng in self.replicas:
             ev.extend(eng.drain_events())
         return ev
@@ -148,7 +312,9 @@ class RequestRouter:
 
     def cancel(self, rid: int) -> bool:
         """Drop a request mid-stream (extract-and-discard); True if the
-        rid was live anywhere in the fleet."""
+        rid was live anywhere in the fleet.  Idempotent — a second
+        cancel (including one racing a drain's migration) finds
+        nothing and returns False."""
         return self.extract(rid) is not None
 
     # --------------------------------------------------------- affinity
@@ -159,7 +325,7 @@ class RequestRouter:
                 for j in range(len(toks) // ps)]
 
     def _record_dispatch(self, i: int, prompt) -> None:
-        rec = self._recent[i]
+        rec = self._recent[self._ids[i]]
         for key in self._page_keys(prompt):
             rec.pop(key, None)               # re-dispatch refreshes LRU
             rec[key] = None
@@ -173,7 +339,7 @@ class RequestRouter:
         resident = (eng.cache.prefix.probe(prompt)
                     if eng.cache.prefix is not None else 0)
         ps = eng.cache.page_size
-        rec, planned = self._recent[i], 0
+        rec, planned = self._recent[self._ids[i]], 0
         for n, key in enumerate(self._page_keys(prompt)):
             if key not in rec:
                 break
@@ -198,7 +364,8 @@ class RequestRouter:
     def _pick(self, req: Request) -> Optional[int]:
         n = len(self.replicas)
         eligible = [i for i in range(n)
-                    if self.replicas[i].n_inflight < self.max_inflight
+                    if self._ids[i] not in self._draining
+                    and self.replicas[i].n_inflight < self.max_inflight
                     and self._can_admit(i, req)]
         if not eligible:
             return None                  # backpressure: hold the queue
@@ -217,12 +384,26 @@ class RequestRouter:
                 eligible = [i for i in eligible if aff[i] == best]
         return min(eligible, key=lambda i: (load[i], i))
 
+    # --------------------------------------------------------- harvest
+    def _harvest(self, i: int) -> None:
+        eng, rid = self.replicas[i], self._ids[i]
+        new = eng.finished[self._harvested[rid]:]
+        if new:
+            self.completed.extend(new)
+            self._harvested[rid] = len(eng.finished)
+
+    def _harvest_all(self) -> None:
+        for i in range(len(self.replicas)):
+            self._harvest(i)
+
     # ------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:
-        """One router iteration: place every arrived queued request a
-        replica will take (FIFO), then pump one engine step on every
-        replica with work.  Returns True while anything is queued or
-        in flight."""
+        """One router iteration: execute pending drains (migrating
+        their requests), place every arrived queued request a replica
+        will take (FIFO), then pump one engine step on every replica
+        with work.  Returns True while anything is queued or in
+        flight."""
+        self._pump_drains()
         while self.queue and self.queue[0].arrival <= now:
             i = self._pick(self.queue[0])
             if i is None:
@@ -232,26 +413,37 @@ class RequestRouter:
             self._record_dispatch(i, req.prompt)
             self.n_dispatched[i] += 1
         busy = False
-        for eng in self.replicas:
+        for i, eng in enumerate(self.replicas):
             if eng.n_inflight:
                 eng.step(now)
                 busy = True
+            self._harvest(i)
         return busy or bool(self.queue)
 
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, float]:
-        """Field-wise sum of every replica's engine counters plus the
-        router's own: reads identically to ``ServeEngine.stats`` (the
-        ``ServeBackend`` contract), with fleet-level extras."""
-        agg: Dict[str, float] = {}
+        """Field-wise sum of every replica's engine counters — living
+        AND departed (a replica leaving the fleet never un-counts its
+        work, so cross-counter identities like ``n_total_dispatches =
+        prefill + decode + replay − fused`` hold across churn) — plus
+        the router's own: reads identically to ``ServeEngine.stats``
+        (the ``ServeBackend`` contract), with fleet-level extras."""
+        agg: Dict[str, float] = dict(self._departed_stats)
         for eng in self.replicas:
             for k, v in eng.stats().items():
-                agg[k] = agg.get(k, 0) + v
+                if k not in _RATIO_FIELDS:
+                    agg[k] = agg.get(k, 0) + v
         # ratio fields don't sum — recompute from the summed counters
-        agg["prefill_rows_mean"] = (agg["n_prefill_chunks"]
-                                    / max(agg["n_prefill_dispatches"], 1))
+        agg["prefill_rows_mean"] = (agg.get("n_prefill_chunks", 0)
+                                    / max(agg.get("n_prefill_dispatches",
+                                                  0), 1))
         agg["n_replicas"] = len(self.replicas)
-        agg["n_routed"] = sum(self.n_dispatched)
+        agg["n_replicas_peak"] = self.n_replicas_peak
+        agg["n_joined"] = self.n_joined
+        agg["n_departed"] = self.n_departed
+        agg["n_migrations"] = self.n_migrations
+        agg["n_migrated_tokens"] = self.n_migrated_tokens
+        agg["n_routed"] = sum(self.n_dispatched) + self._departed_routed
         agg["n_affinity_hits"] = self.n_affinity_hits
         return agg
 
@@ -261,7 +453,7 @@ class RequestRouter:
         """Drive to completion; returns the requests completed by THIS
         call, in completion order (``Request.rid`` identifies streams).
         Mirrors ``ServeEngine.run``'s realtime semantics."""
-        first = {id(e): len(e.finished) for e in self.replicas}
+        first = len(self.finished)
         for r in requests:
             self.submit(r)
         t0 = time.perf_counter()
@@ -273,8 +465,6 @@ class RequestRouter:
                     and not any(e.n_inflight for e in self.replicas):
                 time.sleep(max(0.0, self.queue[0].arrival
                                - (time.perf_counter() - t0)))
-        done = []
-        for e in self.replicas:
-            done.extend(e.finished[first[id(e)]:])
+        done = list(self.finished[first:])
         done.sort(key=lambda r: (r.finish_time, r.rid))
         return done

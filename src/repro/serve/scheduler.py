@@ -216,6 +216,7 @@ class ServeEngine:
         self._admit_seq: Dict[int, int] = {}      # slot -> admission order
         self._admit_counter = 0
         self.finished: List[Request] = []
+        self.n_engine_steps = 0          # step() calls that found work
         self.n_decode_steps = 0
         self.n_prefill_chunks = 0        # per-row chunks ingested
         self.n_prefill_dispatches = 0    # prefill program launches
@@ -297,6 +298,22 @@ class ServeEngine:
             if r.rid == rid:
                 return self._evict_slot(slot)
         return None
+
+    def extract_all(self) -> List[Request]:
+        """Remove EVERY live request — admitted slots in admission
+        order, then the waiting queue — freeing all slots and pages;
+        the bulk form of ``extract``, used by a draining replica to
+        hand its whole population to another backend.  Each returned
+        request carries its confirmed tokens; re-submission elsewhere
+        resumes each stream token-exactly, and pages the prompts
+        donated to this engine's trie stay resident until the engine
+        itself is retired."""
+        out: List[Request] = []
+        for slot in sorted(self._admit_seq, key=self._admit_seq.get):
+            out.append(self._evict_slot(slot))
+        out.extend(self.waiting)
+        self.waiting.clear()
+        return out
 
     def cancel(self, rid: int) -> bool:
         """Drop a request mid-stream: extract-and-discard.  Pages the
@@ -768,6 +785,8 @@ class ServeEngine:
         # standalone prefill launch; degenerate mixes — prefill-only
         # ramp, decode-only tail — take the standalone programs, so
         # they reproduce the unfused engine dispatch-for-dispatch.
+        if self.n_inflight:
+            self.n_engine_steps += 1
         while True:
             self._admit_burst(now)
             if not self.prefilling:
@@ -799,6 +818,7 @@ class ServeEngine:
         ``prefill_rows_mean`` is the mean number of requests sharing a
         prefill dispatch (1.0 == the serialized path)."""
         return {
+            "n_engine_steps": self.n_engine_steps,
             "n_decode_steps": self.n_decode_steps,
             "n_prefill_chunks": self.n_prefill_chunks,
             "n_prefill_dispatches": self.n_prefill_dispatches,

@@ -7,9 +7,11 @@ bitwise against the sequential greedy oracle (cancelled streams must be
 an oracle prefix: confirmed tokens never un-confirm).
 
 ``drive_and_check`` is the reusable conformance harness: any test file
-(or future PR) can drive an engine through a trace and inherit the full
+(or future PR) can drive a backend through a trace and inherit the full
 invariant + parity bar.  A tp=2 arm reruns a subset of cases sharded
-(skipped below 2 devices; CI's multidevice job forces host devices).
+(skipped below 2 devices; CI's multidevice job forces host devices);
+an elastic-churn arm reruns cases on a router whose fleet is grown and
+drained mid-trace (live requests migrating between replicas).
 """
 import dataclasses
 
@@ -72,10 +74,13 @@ def oracle(bundle):
 
 # ---------------------------------------------------------- the harness
 def drive_and_check(engine, trace, *, oracle=None, cancels=None,
-                    max_steps=2000):
+                    events=None, max_steps=2000):
     """Drive ``engine`` through ``trace`` step by step and enforce the
     serve-conformance bar.  Returns {rid: np.ndarray(generated)}.
 
+    * ``engine`` is any ``ServeBackend`` — a single engine, a router,
+      or an elastic controller (anything with a ``replicas`` list gets
+      every live replica's allocator checked);
     * ``trace``: Requests with integer ``arrival`` times; all are
       submitted upfront and admission follows the synthetic clock
       (``step(now=t)`` with t = 0, 1, 2, ...), so arrival raggedness
@@ -83,24 +88,33 @@ def drive_and_check(engine, trace, *, oracle=None, cancels=None,
     * allocator invariants (``cache.check_invariants``: refcounts,
       free list, null page) are asserted after EVERY step;
     * ``cancels``: {step t: [rid, ...]} applied before that step;
+    * ``events``: {step t: [fn, ...]} — arbitrary chaos callbacks
+      (e.g. elastic scale-up/drain) applied to the backend before that
+      step, before the step's cancels;
     * ``oracle``: rid -> expected stream.  Finished requests must match
       bitwise; cancelled requests must be a strict prefix (tokens
       already streamed were confirmed and can never change).
     """
     cancels = cancels or {}
+    events = events or {}
     for r in trace:
         engine.submit(r)
     cancelled = set()
     t = 0
     while True:
+        for fn in events.get(t, ()):
+            fn(engine)
         for rid in cancels.get(t, ()):
             if engine.cancel(rid):
                 cancelled.add(rid)
         more = engine.step(now=float(t))
-        engine.cache.check_invariants()
+        for cache in ([e.cache for e in engine.replicas]
+                      if hasattr(engine, "replicas")
+                      else [engine.cache]):
+            cache.check_invariants()
         t += 1
         assert t < max_steps, "engine failed to drain the trace"
-        if not more and t > max(r.arrival for r in trace):
+        if not more and t > max((r.arrival for r in trace), default=0):
             break
     done = {r.rid: np.asarray(r.generated, np.int32)
             for r in engine.finished}
@@ -187,3 +201,46 @@ def test_fuzz_tp2_matches_oracle(bundle, oracle, seed):
     eng = ServeEngine(model, params, fused=True, programs=tp_programs,
                       **knobs)
     drive_and_check(eng, _fresh(reqs), oracle=oracle, cancels=cancels)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzz_elastic_churn_matches_oracle(bundle, oracle, seed):
+    """The elastic-churn arm: the same chaos traces, served by a
+    router whose fleet is mutated MID-TRACE by seeded scale-up and
+    graceful-drain events (the primitives the elastic controller
+    composes).  Drains migrate live requests — extracted at their
+    confirmed-token frontier and re-admitted on a surviving replica —
+    so the bar is the full conformance bar: allocator invariants on
+    every live replica every step, every finished stream bitwise vs
+    the oracle, cancels (including ones racing a drain) exact."""
+    from repro.serve import RequestRouter
+    cfg, model, params, programs = bundle
+    reqs, knobs, cancels = _case(seed, cfg)
+
+    def mk():
+        return ServeEngine(model, params, fused=True,
+                           programs=programs, **knobs)
+
+    router = RequestRouter([mk(), mk()], policy="prefix")
+    rng = np.random.default_rng(2000 + seed)
+    events = {}
+    for t in rng.choice(np.arange(1, 14),
+                        size=int(rng.integers(2, 5)), replace=False):
+        def churn(r, _rng=rng):
+            live = [i for i in range(len(r.replicas))
+                    if not r.is_draining(i)]
+            grow = len(r.replicas) < 4 and (len(live) < 2
+                                            or _rng.random() < 0.5)
+            if grow:
+                r.add_replica(mk())
+            elif len(live) > 1:
+                r.drain(int(_rng.choice(live)))
+        events.setdefault(int(t), []).append(churn)
+    drive_and_check(router, _fresh(reqs), oracle=oracle,
+                    cancels=cancels, events=events)
+    # membership churn happened and nothing was lost or double-counted
+    assert router.n_joined >= 2
+    st = router.stats()
+    assert st["n_total_dispatches"] == (
+        st["n_prefill_dispatches"] + st["n_decode_steps"]
+        + st["n_replay_steps"] - st["n_fused_dispatches"])
