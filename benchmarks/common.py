@@ -52,6 +52,16 @@ def warm_serve_arms(engines, make_requests) -> None:
         eng.run(make_requests(), realtime=False)
 
 
+def metrics_snapshot(backend) -> Dict[str, float]:
+    """Flattened metrics-registry snapshot of a serve backend's
+    telemetry (``name{label=value,...} -> value``), or ``{}`` for a
+    backend without one.  Benchmarks attach this under the
+    ``metrics_snapshot`` key so summary.json carries the full labelled
+    registry next to the headline scalars."""
+    tel = getattr(backend, "tel", None)
+    return dict(tel.registry.snapshot()) if tel is not None else {}
+
+
 def fmt_table(rows: List[Dict], cols: List[str]) -> str:
     if not rows:
         return "  ".join(cols) + "\n(no rows)"

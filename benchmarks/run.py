@@ -50,9 +50,17 @@ BENCHES = {
 
 def _metrics(out: dict) -> dict:
     """Scalar metrics worth tracking across PRs (gates are reported
-    separately; tables and token dumps are noise at trend granularity)."""
-    return {k: v for k, v in (out or {}).items()
-            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    separately; tables and token dumps are noise at trend granularity).
+    The labelled telemetry registry rides along under its own
+    ``metrics_snapshot`` key — serve benches attach it via
+    ``common.metrics_snapshot`` — kept intact, not flattened into the
+    scalar trend."""
+    m = {k: v for k, v in (out or {}).items()
+         if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    snap = (out or {}).get("metrics_snapshot")
+    if snap:
+        m["metrics_snapshot"] = snap
+    return m
 
 
 def main(argv):

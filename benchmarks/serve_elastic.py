@@ -56,7 +56,8 @@ from repro.serve import (ElasticController, ElasticPolicy, Request,
                          greedy_generate)
 from repro.serve.kv_cache import pages_needed
 
-from .common import fmt_table, save, warm_serve_arms
+from .common import (fmt_table, metrics_snapshot, save,
+                     warm_serve_arms)
 
 ARCH = "qwen3-0.6b"
 PAGE, BATCH, CHUNK = 8, 4, 16
@@ -228,7 +229,8 @@ def run(smoke: bool = False) -> dict:
            "complete_ok": static_ok and elastic_ok,
            "parity_ok": static_parity and elastic_parity,
            "migration_reuse_ok": migration_reuse_ok,
-           "elastic_steps_ok": steps_elastic < steps_static}
+           "elastic_steps_ok": steps_elastic < steps_static,
+           "metrics_snapshot": metrics_snapshot(ctl)}
     save("serve_elastic", out)
     return out
 

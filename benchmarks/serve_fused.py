@@ -52,7 +52,8 @@ from repro.models import build_model
 from repro.serve import Request, ServeEngine, ServePrograms, greedy_generate
 from repro.serve.kv_cache import pages_needed
 
-from .common import fmt_table, save, warm_serve_arms
+from .common import (fmt_table, metrics_snapshot, save,
+                     warm_serve_arms)
 
 ARCH = "qwen3-0.6b"
 PAGE = 8
@@ -175,7 +176,8 @@ def run(smoke: bool = False) -> dict:
            # deterministic -> gated at every size
            "fused_dispatch_ok": ratio >= 1.8,
            "token_parity": parity,
-           "oracle_parity": oracle_parity}
+           "oracle_parity": oracle_parity,
+           "metrics_snapshot": metrics_snapshot(engines[True])}
     save("serve_fused", out)
     return out
 

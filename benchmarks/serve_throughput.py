@@ -22,7 +22,7 @@ from repro.serve.kv_cache import pages_needed
 from repro.serve.step import make_decode_step, make_prefill_step
 from repro.launch.serve import synth_requests
 
-from .common import fmt_table, save
+from .common import fmt_table, metrics_snapshot, save
 
 ARCH = "qwen3-0.6b"
 
@@ -125,7 +125,8 @@ def run(smoke: bool = False, batch: int = 8) -> dict:
     print(fmt_table(rows, ["system", "tok_per_s", "ttft_ms"]))
     print(f"continuous batching speedup: {speedup:.2f}x; "
           f"token parity with sequential oracle: {parity}")
-    out = {"rows": rows, "speedup": speedup, "token_parity": parity}
+    out = {"rows": rows, "speedup": speedup, "token_parity": parity,
+           "metrics_snapshot": metrics_snapshot(eng)}
     if not smoke:
         # perf assertion only at full size: smoke problem sizes are too
         # small to amortize the paged gather, and CI runners are noisy

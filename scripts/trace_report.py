@@ -1,0 +1,226 @@
+#!/usr/bin/env python
+"""Summarise a serve telemetry JSONL trace (--trace-out output).
+
+Prints per-tenant / per-SLO latency percentiles (TTFT and queue
+delay in the trace's own clock units), speculation accept-rate, the
+dispatch-kind step mix, and a migration table.  Extras:
+
+    python scripts/trace_report.py TRACE.jsonl
+    python scripts/trace_report.py TRACE.jsonl --validate
+    python scripts/trace_report.py TRACE.jsonl --chrome OUT.json
+
+``--validate`` re-checks the JSONL schema contract (line types, span
+shape, event kinds, terminal uniqueness, token accounting) and exits
+nonzero on any violation — CI runs it over the smoke trace.
+``--chrome`` converts the trace to Chrome trace-event JSON for
+Perfetto / chrome://tracing.
+
+The telemetry module is loaded straight from its source file so this
+script never imports the jax-heavy ``repro.serve`` package — it runs
+anywhere a trace file lands, no accelerator stack required.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+_TEL_PATH = (Path(__file__).resolve().parent.parent / "src" / "repro"
+             / "serve" / "telemetry.py")
+
+
+def _load_telemetry():
+    spec = importlib.util.spec_from_file_location(
+        "_serve_telemetry", _TEL_PATH)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclass processing resolves the defining module through
+    # sys.modules, so the file-loaded module must be registered first
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def load_lines(path: str):
+    lines = []
+    with open(path) as f:
+        for i, raw in enumerate(f, 1):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                lines.append(json.loads(raw))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{i}: not JSON ({e})")
+    return lines
+
+
+def validate(lines, tel) -> list:
+    """Schema check over parsed lines; returns violation strings."""
+    errs = []
+    if not lines or lines[0].get("type") != "meta":
+        errs.append("first line must be the meta record")
+    for i, ln in enumerate(lines, 1):
+        typ = ln.get("type")
+        if typ not in ("meta", "span", "step", "metrics"):
+            errs.append(f"line {i}: unknown type {typ!r}")
+            continue
+        if typ == "span":
+            for field in ("rid", "tenant", "slo", "events"):
+                if field not in ln:
+                    errs.append(f"line {i}: span missing {field!r}")
+            evs = ln.get("events", [])
+            kinds = [e.get("kind") for e in evs]
+            for e in evs:
+                if e.get("kind") not in tel.EVENT_KINDS:
+                    errs.append(f"line {i}: rid {ln.get('rid')} bad "
+                                f"event kind {e.get('kind')!r}")
+                if not isinstance(e.get("t"), (int, float)):
+                    errs.append(f"line {i}: rid {ln.get('rid')} event "
+                                "missing numeric t")
+            if kinds and kinds[0] != "submitted":
+                errs.append(f"line {i}: rid {ln.get('rid')} span does "
+                            "not open with 'submitted'")
+            terms = [k for k in kinds if k in tel.TERMINAL_KINDS]
+            if kinds and (len(terms) != 1
+                          or kinds[-1] not in tel.TERMINAL_KINDS):
+                errs.append(f"line {i}: rid {ln.get('rid')} has "
+                            f"{len(terms)} terminal events")
+            ntok = sum(e.get("n", 0) for e in evs
+                       if e.get("kind") in ("decode_round", "promoted"))
+            if "generated" in ln and ntok != ln["generated"]:
+                errs.append(f"line {i}: rid {ln.get('rid')} events "
+                            f"confirm {ntok} tokens, span header says "
+                            f"{ln['generated']}")
+        elif typ == "step":
+            for field in ("component", "t"):
+                if field not in ln:
+                    errs.append(f"line {i}: step missing {field!r}")
+        elif typ == "metrics" and "values" not in ln:
+            errs.append(f"line {i}: metrics missing 'values'")
+    return errs
+
+
+def report(lines, tel, out=sys.stdout):
+    meta = lines[0] if lines and lines[0].get("type") == "meta" else {}
+    unit = meta.get("clock", "steps")
+    spans = [ln for ln in lines if ln.get("type") == "span"]
+    steps = [ln for ln in lines if ln.get("type") == "step"]
+
+    ttft = defaultdict(list)      # (tenant, slo) -> [ttft, ...]
+    qdelay = defaultdict(list)    # (tenant, slo) -> [admit delay, ...]
+    drafted = accepted = 0
+    migrations = []
+    n_finished = n_cancelled = 0
+    for sp in spans:
+        evs = sp.get("events", [])
+        key = (sp.get("tenant", "default"), sp.get("slo", "batch"))
+        t_sub = next((e["t"] for e in evs
+                      if e["kind"] == "submitted"), None)
+        t_adm = next((e["t"] for e in evs
+                      if e["kind"] == "admitted"), None)
+        t_tok = next((e["t"] for e in evs
+                      if e["kind"] in ("promoted", "decode_round")
+                      and e.get("n", 0) > 0), None)
+        if t_sub is not None and t_adm is not None:
+            qdelay[key].append(t_adm - t_sub)
+        if t_sub is not None and t_tok is not None:
+            ttft[key].append(t_tok - t_sub)
+        for e in evs:
+            if e["kind"] == "decode_round":
+                drafted += e.get("drafted", 0)
+                accepted += e.get("accepted", 0)
+            elif e["kind"] == "migrated":
+                migrations.append((sp["rid"], e.get("src", "?"),
+                                   e.get("dst", "?"),
+                                   e.get("n_generated", 0)))
+            elif e["kind"] == "finished":
+                n_finished += 1
+            elif e["kind"] == "cancelled":
+                n_cancelled += 1
+
+    w = out.write
+    w(f"trace: {len(spans)} requests ({n_finished} finished, "
+      f"{n_cancelled} cancelled), {len(steps)} step records, "
+      f"clock={unit}\n")
+
+    if ttft or qdelay:
+        w(f"\nlatency by tenant/SLO ({unit}):\n")
+        w(f"  {'tenant':<10} {'slo':<12} {'n':>4} "
+          f"{'ttft_p50':>9} {'ttft_p99':>9} "
+          f"{'queue_p50':>9} {'queue_p99':>9}\n")
+        for key in sorted(set(ttft) | set(qdelay)):
+            tt, qq = ttft.get(key, []), qdelay.get(key, [])
+            w(f"  {key[0]:<10} {key[1]:<12} {len(tt):>4} "
+              f"{tel.percentile(tt, 50):>9.2f} "
+              f"{tel.percentile(tt, 99):>9.2f} "
+              f"{tel.percentile(qq, 50):>9.2f} "
+              f"{tel.percentile(qq, 99):>9.2f}\n")
+
+    if drafted:
+        w(f"\nspeculation: {accepted}/{drafted} drafts accepted "
+          f"(accept_rate={accepted / drafted:.3f})\n")
+
+    kinds = defaultdict(int)
+    for ln in steps:
+        if ln.get("component") == "engine":
+            kinds[ln.get("kind", "?")] += 1
+    if kinds:
+        w("\nengine step mix: ")
+        w(", ".join(f"{k}={n}" for k, n in
+                    sorted(kinds.items(), key=lambda kv: -kv[1])))
+        w("\n")
+
+    if migrations:
+        w(f"\nmigrations ({len(migrations)}):\n")
+        w(f"  {'rid':>5} {'src':<6} {'dst':<6} {'tokens_carried':>14}\n")
+        for rid, src, dst, n in migrations:
+            w(f"  {rid:>5} {src:<6} {dst:<6} {n:>14}\n")
+
+    final = next((ln for ln in reversed(lines)
+                  if ln.get("type") == "metrics"), None)
+    if final:
+        vals = final.get("values", {})
+        picks = sorted(k for k in vals
+                       if k.startswith(("n_total_dispatches",
+                                        "n_migrations",
+                                        "n_replicas_peak")))
+        if picks:
+            w("\nfinal metrics: ")
+            w(", ".join(f"{k}={vals[k]:g}" for k in picks))
+            w("\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarise a serve telemetry JSONL trace.")
+    ap.add_argument("trace", help="path to --trace-out JSONL file")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the trace; exit 1 on violation")
+    ap.add_argument("--chrome", metavar="OUT.json",
+                    help="also write Chrome trace-event JSON "
+                         "(Perfetto / chrome://tracing)")
+    args = ap.parse_args(argv)
+
+    tel = _load_telemetry()
+    lines = load_lines(args.trace)
+    if args.validate:
+        errs = validate(lines, tel)
+        if errs:
+            for e in errs:
+                print(f"INVALID: {e}", file=sys.stderr)
+            return 1
+        print(f"validate: OK ({len(lines)} lines)")
+    report(lines, tel)
+    if args.chrome:
+        with open(args.chrome, "w") as f:
+            json.dump(tel.chrome_trace(lines), f)
+        n = len(tel.chrome_trace(lines)["traceEvents"])
+        print(f"\nchrome trace: wrote {args.chrome} ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

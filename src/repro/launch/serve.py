@@ -67,9 +67,22 @@ def serve_trace(opts: ServeOptions, model, params, reqs, *,
                 realtime: bool = True, smoke: bool = False):
     """Serve ``reqs`` on the backend ``opts`` describes and return the
     aggregate stats dict the CLI prints (throughput, TTFT, dispatch
-    and cache-reuse counters)."""
-    return _drive(opts.build(model, params, smoke=smoke), reqs,
-                  realtime=realtime)
+    and cache-reuse counters).  With ``opts.trace_out`` set, the run's
+    telemetry (spans + step timeline + metrics) lands there as JSONL
+    (scripts/trace_report.py reads it)."""
+    front = opts.build(model, params, smoke=smoke)
+    out = _drive(front, reqs, realtime=realtime)
+    _write_trace(opts, front, realtime=realtime)
+    return out
+
+
+def _write_trace(opts: ServeOptions, backend, *, realtime: bool) -> None:
+    tel = getattr(backend, "tel", None)
+    if tel is None or not opts.trace_out:
+        return
+    tel.clock_label = "seconds" if realtime else "steps"
+    tel.write_jsonl(opts.trace_out)
+    print(f"telemetry: wrote {opts.trace_out}")
 
 
 def _drive(front, reqs, *, realtime: bool):
@@ -105,8 +118,9 @@ def _drive(front, reqs, *, realtime: bool):
             "spec_rounds": st["n_spec_rounds"],
             "drafted": st["n_drafted"],
             "draft_accepted": st["n_draft_accepted"],
-            "accept_rate": st["n_draft_accepted"]
-            / max(st["n_drafted"], 1),
+            # derived by telemetry.merge_stats inside stats() — the
+            # same formula per replica and fleet-wide
+            "accept_rate": st["accept_rate"],
             "dispatched": list(getattr(router, "n_dispatched",
                                        [len(done)])),
             "affinity_hits": int(st.get("n_affinity_hits", 0)),
@@ -186,6 +200,7 @@ def run_stream(opts: ServeOptions, model, params, reqs, *,
               + ", ".join(f"{t}={int(v)}" for t, v in shares.items()))
     print(f"  {int(st['n_slo_preemptions'])} SLO preemptions, "
           f"{int(st['n_cancelled'])} cancelled")
+    _write_trace(opts, fe, realtime=True)
 
 
 def run_naive(model, params, cfg, args):

@@ -9,6 +9,10 @@ from .scheduler import (  # noqa: F401
     SLO_CLASSES, Request, ServeEngine, default_bucket_edges,
 )
 from .spec import DraftModelDrafter, PromptLookupDrafter  # noqa: F401
+from .telemetry import (  # noqa: F401
+    MetricsRegistry, SpanEvent, Telemetry, check_spans, chrome_trace,
+    merge_stats,
+)
 from .step import (  # noqa: F401
     ServePrograms, greedy_generate, make_chunk_prefill_step,
     make_decode_step, make_paged_decode_step, make_prefill_step,

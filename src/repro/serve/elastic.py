@@ -63,6 +63,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from .backend import StreamEvent
 from .router import RequestRouter
 from .scheduler import Request, ServeEngine
+from .telemetry import expose_counters, next_uid
 
 __all__ = ["ElasticController", "ElasticPolicy",
            "plan_elastic_mesh", "StragglerMonitor", "StragglerEvent"]
@@ -90,6 +91,7 @@ class ElasticPolicy:
             raise ValueError("target_load must be > 0")
 
 
+@expose_counters("n_scale_ups", "n_scale_downs")
 class ElasticController:
     """A ``ServeBackend`` that owns a router and resizes its fleet.
 
@@ -114,8 +116,14 @@ class ElasticController:
         self._tick = 0
         self._ema: Optional[float] = None
         self._low_rounds = 0
-        self.n_scale_ups = 0
-        self.n_scale_downs = 0
+        # counters in the fleet's shared registry (legacy names via
+        # @expose_counters); the controller shares the router's
+        # Telemetry — one registry per serving stack
+        self.tel = router.tel
+        self.uid = next_uid("c")
+        self._c = {n: self.tel.registry.counter(
+            n, component="elastic", replica=self.uid)
+            for n in ("n_scale_ups", "n_scale_downs")}
 
     # -------------------------------------------------------- delegation
     @property
@@ -193,7 +201,7 @@ class ElasticController:
         up = self._target(demand)
         for _ in range(max(0, up - live)):
             self.router.add_replica(self.factory())
-            self.n_scale_ups += 1
+            self._c["n_scale_ups"].inc()
         live = self.router.n_live
         # scale down on the smoothed signal (never below instant: a
         # trough that already ended is not a trough), with patience —
@@ -206,10 +214,16 @@ class ElasticController:
                 victim = self._victim()
                 if victim is not None:
                     self.router.drain(victim)
-                    self.n_scale_downs += 1
+                    self._c["n_scale_downs"].inc()
                 self._low_rounds = 0
         else:
             self._low_rounds = 0
+        if self.tel:
+            self.tel.record(
+                "elastic", t=self.router._last_now, kind="control",
+                demand=demand, ema=round(self._ema, 3),
+                target_up=up, live=self.router.n_live,
+                draining=len(self.router._draining))
 
     # -------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:

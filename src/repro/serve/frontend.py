@@ -65,6 +65,7 @@ import numpy as np
 
 from .backend import ServeBackend, StreamEvent
 from .scheduler import Request, SLO_CLASSES
+from .telemetry import (Counter, Telemetry, expose_counters, next_uid)
 
 __all__ = ["ServeFrontend", "TokenStream", "TenantPolicy"]
 
@@ -171,11 +172,13 @@ class TokenStream:
             await self._wakeup.wait()
 
 
+@expose_counters("n_slo_preemptions", "n_cancelled")
 class ServeFrontend:
     def __init__(self, backend: ServeBackend, *,
                  tenants: Optional[Dict[str, TenantPolicy]] = None,
                  slo_aware: bool = True,
-                 realtime: bool = False):
+                 realtime: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         self.backend = backend
         self.slo_aware = slo_aware
         self.realtime = realtime
@@ -196,10 +199,25 @@ class ServeFrontend:
         self._next_rid = 0
         self._closed = False
         self.completed: List[Request] = []
-        # stats
-        self.n_slo_preemptions = 0
-        self.n_cancelled = 0
-        self.tenant_tokens: Dict[str, int] = {}
+        # counters live in the backend's shared MetricsRegistry —
+        # legacy names (frontend.n_cancelled, ...) are read-only
+        # properties via @expose_counters; per-tenant token counts are
+        # labelled counters with a dict-compatibility property below.
+        # Explicit IS-NOT-None (a Telemetry with tracing off is falsy).
+        if telemetry is None:
+            telemetry = getattr(backend, "tel", None)
+        self.tel = telemetry if telemetry is not None else Telemetry()
+        self.uid = next_uid("f")
+        self._c = {n: self.tel.registry.counter(
+            n, component="frontend", replica=self.uid)
+            for n in ("n_slo_preemptions", "n_cancelled")}
+        self._tt: Dict[str, Counter] = {}
+
+    @property
+    def tenant_tokens(self) -> Dict[str, int]:
+        """Confirmed tokens streamed per tenant (compatibility view of
+        the registry's labelled ``tenant_tokens`` counters)."""
+        return {t: c.value for t, c in self._tt.items()}
 
     # ------------------------------------------------------------ clock
     @property
@@ -247,6 +265,10 @@ class ServeFrontend:
         stream = TokenStream(self, req)
         self._streams[req.rid] = stream
         self._enqueue(req, front=False)
+        if self.tel:
+            # the true submission instant — queue delay (admitted - t)
+            # includes front-end WFQ/rate-limit/SLO queueing
+            self.tel.request_submitted(req, t=self.clock)
         return stream
 
     def _class_of(self, req: Request) -> str:
@@ -291,7 +313,9 @@ class ServeFrontend:
         self._charged.discard(rid)
         stream.cancelled = True
         stream._wake()
-        self.n_cancelled += 1
+        self._c["n_cancelled"].inc()
+        if self.tel:
+            self.tel.event(stream.req, "cancelled", t=self.clock)
         return True
 
     # --------------------------------------------------------- dispatch
@@ -374,7 +398,11 @@ class ServeFrontend:
             assert extracted is victim.req, (victim.rid, extracted)
             self._inflight.pop(victim.rid)
             victim.req.n_preemptions += 1
-            self.n_slo_preemptions += 1
+            self._c["n_slo_preemptions"].inc()
+            if self.tel:
+                self.tel.event(victim.req, "preempted", t=self._now,
+                               source="slo",
+                               n_generated=len(victim.req.generated))
             self._enqueue(victim.req, front=True)
             self._send(key)
 
@@ -402,8 +430,12 @@ class ServeFrontend:
             return                   # submitted around the front-end
         if ev.tokens:
             t = stream.req.tenant
-            self.tenant_tokens[t] = (self.tenant_tokens.get(t, 0)
-                                     + len(ev.tokens))
+            c = self._tt.get(t)
+            if c is None:
+                c = self._tt[t] = self.tel.registry.counter(
+                    "tenant_tokens", component="frontend",
+                    replica=self.uid, tenant=t)
+            c.inc(len(ev.tokens))
         stream._push(ev.tokens, ev.finished)
         if ev.finished:
             self._streams.pop(ev.rid, None)

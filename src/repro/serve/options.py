@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence
 from .kv_cache import pages_needed
 from .router import ROUTER_POLICIES, RequestRouter
 from .scheduler import ServeEngine
+from .telemetry import Telemetry
 
 __all__ = ["ServeOptions"]
 
@@ -66,6 +67,12 @@ class ServeOptions:
     stream: bool = False
     tenant_weights: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # telemetry (serve/telemetry.py): trace_out != "" or
+    # metrics_interval > 0 turns tracing on; a programmatic caller can
+    # hand in a pre-built Telemetry instead (it wins)
+    trace_out: str = ""
+    metrics_interval: int = 0
+    telemetry: Optional[Telemetry] = None
 
     # ------------------------------------------------------------- CLI
     @staticmethod
@@ -145,6 +152,15 @@ class ServeOptions:
                              "'interactive=3,bulk=1'); requests are "
                              "assigned round-robin across the named "
                              "tenants")
+        ap.add_argument("--trace-out", type=str, default="",
+                        help="write serve telemetry (request lifecycle "
+                             "spans + step timeline + metrics) as JSONL "
+                             "to this path; also turns tracing on "
+                             "(scripts/trace_report.py reads it)")
+        ap.add_argument("--metrics-interval", type=int, default=0,
+                        help="> 0 embeds a full metrics-registry "
+                             "snapshot into the trace every N engine "
+                             "step records (implies tracing)")
 
     @classmethod
     def from_args(cls, args) -> "ServeOptions":
@@ -171,6 +187,8 @@ class ServeOptions:
             stream=getattr(args, "stream", False),
             tenant_weights=_parse_weights(
                 getattr(args, "tenant_weights", "")),
+            trace_out=getattr(args, "trace_out", ""),
+            metrics_interval=getattr(args, "metrics_interval", 0),
         )
 
     # ------------------------------------------------------ construction
@@ -233,6 +251,15 @@ class ServeOptions:
                 programs = ServePrograms(model)
         drafter_factory = self.make_drafter_factory(model.cfg,
                                                     smoke=smoke)
+        # ONE Telemetry per stack: every engine (including ones the
+        # elastic controller adds later), the router, the controller
+        # and the front-end share it, so spans survive migration and
+        # the registry sees the whole fleet (backend.tel reaches it)
+        tel = self.telemetry
+        if tel is None:
+            tel = Telemetry(
+                trace=bool(self.trace_out or self.metrics_interval),
+                metrics_interval=self.metrics_interval)
 
         def mk():
             return ServeEngine(
@@ -246,7 +273,8 @@ class ServeOptions:
                 drafter=(drafter_factory() if drafter_factory
                          else None),
                 fused=self.fused,
-                programs=programs)
+                programs=programs,
+                telemetry=tel)
 
         if self.max_replicas > 0:
             # elastic fleet: start at the floor, let demand grow it.
@@ -259,11 +287,13 @@ class ServeOptions:
                 max_replicas=max(lo, self.max_replicas),
                 scale_interval=self.scale_interval)
             router = RequestRouter([mk() for _ in range(lo)],
-                                   policy=self.router_policy)
+                                   policy=self.router_policy,
+                                   telemetry=tel)
             return ElasticController(router, mk, policy=policy)
         if self.replicas > 1:
             return RequestRouter([mk() for _ in range(self.replicas)],
-                                 policy=self.router_policy)
+                                 policy=self.router_policy,
+                                 telemetry=tel)
         return mk()
 
     def build_frontend(self, model, params, *, smoke: bool = False,

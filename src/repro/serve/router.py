@@ -81,21 +81,24 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .backend import StreamEvent
 from .scheduler import Request, ServeEngine
+from .telemetry import (Telemetry, expose_counters, merge_stats,
+                        next_uid)
 
 __all__ = ["RequestRouter", "ROUTER_POLICIES"]
 
 ROUTER_POLICIES = ("prefix", "least-loaded", "round-robin")
 
-# engine counters that stay meaningful summed across replicas (the
-# ratio fields are recomputed from these after the sum)
-_RATIO_FIELDS = ("prefill_rows_mean",)
+_ROUTER_COUNTERS = ("n_joined", "n_departed", "n_migrations",
+                    "n_migrated_tokens", "n_affinity_hits")
 
 
+@expose_counters(*_ROUTER_COUNTERS)
 class RequestRouter:
     def __init__(self, replicas: Sequence[ServeEngine], *,
                  policy: str = "prefix",
                  max_inflight: Optional[int] = None,
-                 affinity_record: int = 1024):
+                 affinity_record: int = 1024,
+                 telemetry: Optional[Telemetry] = None):
         if not replicas:
             raise ValueError("router needs at least one replica")
         if policy not in ROUTER_POLICIES:
@@ -129,14 +132,24 @@ class RequestRouter:
         # across arbitrary membership churn
         self._departed_stats: Dict[str, float] = {}
         self._departed_routed = 0
-        self.n_joined = 0
-        self.n_departed = 0
-        self.n_replicas_peak = 0
-        self.n_migrations = 0            # requests moved by a drain
-        self.n_migrated_tokens = 0       # confirmed tokens they carried
+        # counters live in the shared MetricsRegistry — legacy names
+        # (n_joined, n_migrations = requests moved by a drain,
+        # n_migrated_tokens = confirmed tokens they carried,
+        # n_affinity_hits = dispatches with affinity > 0, ...) are
+        # read-only properties via @expose_counters.  The router
+        # inherits the first replica's Telemetry by default, so a
+        # hand-built fleet shares one registry without extra wiring.
+        self.tel = (telemetry if telemetry is not None
+                    else replicas[0].tel)
+        self.uid = next_uid("r")
+        self._c = {n: self.tel.registry.counter(
+            n, component="router", replica=self.uid)
+            for n in _ROUTER_COUNTERS}
+        self._peak = self.tel.registry.gauge(
+            "n_replicas_peak", component="router", replica=self.uid)
         self.migrated_rids: set = set()
-        # stats
-        self.n_affinity_hits = 0         # dispatches with affinity > 0
+        self._migrating: Dict[int, str] = {}   # rid -> src engine uid
+        self._last_now = 0.0
         for eng in replicas:
             self.add_replica(eng)
 
@@ -153,10 +166,17 @@ class RequestRouter:
         self._recent[rid] = {}
         self._harvested[rid] = len(engine.finished)
         self.n_dispatched.append(0)
-        self.n_joined += 1
-        self.n_replicas_peak = max(self.n_replicas_peak,
-                                   self.n_live)
+        self._c["n_joined"].inc()
+        self._peak.set(max(self.n_replicas_peak, self.n_live))
+        if self.tel:
+            self.tel.record("router", t=self._last_now, kind="join",
+                            replica=engine.uid,
+                            fleet=len(self.replicas))
         return rid
+
+    @property
+    def n_replicas_peak(self) -> int:
+        return int(self._peak.value)
 
     def _index_of(self, replica: Union[int, ServeEngine]) -> int:
         if isinstance(replica, ServeEngine):
@@ -202,10 +222,8 @@ class RequestRouter:
         assert eng.n_inflight == 0, "removing a replica with live work"
         self._harvest(i)
         self._pending_events.extend(eng.drain_events())
-        for k, v in eng.stats().items():
-            if k not in _RATIO_FIELDS:
-                self._departed_stats[k] = \
-                    self._departed_stats.get(k, 0) + v
+        self._departed_stats = merge_stats([self._departed_stats,
+                                            eng.stats()])
         self._departed_routed += self.n_dispatched[i]
         rid = self._ids[i]
         self._draining.discard(rid)
@@ -214,7 +232,11 @@ class RequestRouter:
         del self.replicas[i]
         del self._ids[i]
         del self.n_dispatched[i]
-        self.n_departed += 1
+        self._c["n_departed"].inc()
+        if self.tel:
+            self.tel.record("router", t=self._last_now, kind="retire",
+                            replica=eng.uid,
+                            fleet=len(self.replicas))
         if self._rr > i:
             self._rr -= 1
         self._rr = self._rr % max(len(self.replicas), 1)
@@ -231,10 +253,14 @@ class RequestRouter:
                   if self._ids[j] in self._draining]:
             eng = self.replicas[i]
             reqs = eng.extract_all()
-            self.n_migrations += len(reqs)
+            self._c["n_migrations"].inc(len(reqs))
             for r in reqs:
-                self.n_migrated_tokens += len(r.generated)
+                self._c["n_migrated_tokens"].inc(len(r.generated))
                 self.migrated_rids.add(r.rid)
+                if self.tel:
+                    # the "migrated" span event lands at re-dispatch,
+                    # when the destination is known (see step)
+                    self._migrating[r.rid] = eng.uid
             migrated.extend(reqs)
             self._remove_replica(i)
         migrated.sort(key=lambda r: (r.arrival, r.rid))
@@ -260,6 +286,8 @@ class RequestRouter:
         """Queue a request (see ``check_admissible`` for rejection)."""
         self.check_admissible(req)
         self.queue.append(req)
+        if self.tel:
+            self.tel.request_submitted(req, t=req.arrival)
 
     @property
     def n_inflight(self) -> int:
@@ -315,7 +343,12 @@ class RequestRouter:
         rid was live anywhere in the fleet.  Idempotent — a second
         cancel (including one racing a drain's migration) finds
         nothing and returns False."""
-        return self.extract(rid) is not None
+        req = self.extract(rid)
+        if req is not None:
+            self._migrating.pop(rid, None)
+            if self.tel:
+                self.tel.event(req, "cancelled", t=self._last_now)
+        return req is not None
 
     # --------------------------------------------------------- affinity
     def _page_keys(self, prompt) -> List[Tuple[int, ...]]:
@@ -380,7 +413,7 @@ class RequestRouter:
             aff = {i: self._affinity(i, req.prompt) for i in eligible}
             best = max(aff.values())
             if best > 0:
-                self.n_affinity_hits += 1
+                self._c["n_affinity_hits"].inc()
                 eligible = [i for i in eligible if aff[i] == best]
         return min(eligible, key=lambda i: (load[i], i))
 
@@ -403,21 +436,39 @@ class RequestRouter:
         will take (FIFO), then pump one engine step on every replica
         with work.  Returns True while anything is queued or in
         flight."""
+        self._last_now = (float(now) if now != float("inf")
+                          else self._last_now + 1.0)
+        drains = len(self._draining)
         self._pump_drains()
+        n_routed = 0
         while self.queue and self.queue[0].arrival <= now:
             i = self._pick(self.queue[0])
             if i is None:
                 break
             req = self.queue.popleft()
             self.replicas[i].submit(req)
+            if self.tel:
+                src = self._migrating.pop(req.rid, None)
+                if src is not None:
+                    self.tel.event(req, "migrated", t=self._last_now,
+                                   src=src, dst=self.replicas[i].uid,
+                                   n_generated=len(req.generated))
             self._record_dispatch(i, req.prompt)
             self.n_dispatched[i] += 1
+            n_routed += 1
         busy = False
         for i, eng in enumerate(self.replicas):
             if eng.n_inflight:
                 eng.step(now)
                 busy = True
             self._harvest(i)
+        if self.tel and (busy or self.queue or drains or n_routed):
+            self.tel.record(
+                "router", t=self._last_now, kind="route",
+                fleet=len(self.replicas), live=self.n_live,
+                draining=drains, routed=n_routed,
+                queued=len(self.queue),
+                inflight=sum(e.n_inflight for e in self.replicas))
         return busy or bool(self.queue)
 
     # ------------------------------------------------------------ stats
@@ -428,15 +479,10 @@ class RequestRouter:
         prefill + decode + replay − fused`` hold across churn) — plus
         the router's own: reads identically to ``ServeEngine.stats``
         (the ``ServeBackend`` contract), with fleet-level extras."""
-        agg: Dict[str, float] = dict(self._departed_stats)
-        for eng in self.replicas:
-            for k, v in eng.stats().items():
-                if k not in _RATIO_FIELDS:
-                    agg[k] = agg.get(k, 0) + v
-        # ratio fields don't sum — recompute from the summed counters
-        agg["prefill_rows_mean"] = (agg.get("n_prefill_chunks", 0)
-                                    / max(agg.get("n_prefill_dispatches",
-                                                  0), 1))
+        # ratio fields don't sum — merge_stats recomputes them from
+        # the summed counters, the same derivation a lone engine uses
+        agg = merge_stats([self._departed_stats]
+                          + [eng.stats() for eng in self.replicas])
         agg["n_replicas"] = len(self.replicas)
         agg["n_replicas_peak"] = self.n_replicas_peak
         agg["n_joined"] = self.n_joined

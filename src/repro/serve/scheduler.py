@@ -87,6 +87,8 @@ from .backend import StreamEvent
 from .kv_cache import PagedKVCache
 from .spec import PromptLookupDrafter
 from .step import ServePrograms
+from .telemetry import (SpanEvent, Telemetry, expose_counters,
+                        merge_stats, next_uid)
 
 __all__ = ["Request", "ServeEngine", "SLO_CLASSES", "default_bucket_edges"]
 
@@ -122,12 +124,24 @@ class Request:
     n_preemptions: int = 0
     prefill_pos: int = 0                  # prompt tokens ingested
     shared_tokens: int = 0                # prefix-cache hit size
+    # lifecycle span (serve/telemetry.py) — empty unless the serving
+    # stack was built with tracing on; survives migration because the
+    # events ride the Request object itself
+    trace: List[SpanEvent] = dataclasses.field(default_factory=list)
 
     @property
     def finished(self) -> bool:
         return self.finish_time is not None
 
 
+_ENGINE_COUNTERS = (
+    "n_engine_steps", "n_decode_steps", "n_prefill_chunks",
+    "n_prefill_dispatches", "n_replay_steps", "n_fused_dispatches",
+    "n_total_dispatches", "n_spec_rounds", "n_drafted",
+    "n_draft_accepted")
+
+
+@expose_counters(*_ENGINE_COUNTERS)
 class ServeEngine:
     def __init__(self, model, params, *, max_batch: int = 8,
                  n_pages: int = 128, page_size: int = 16,
@@ -142,7 +156,8 @@ class ServeEngine:
                  fused: bool = True,
                  programs: Optional[ServePrograms] = None,
                  tp: int = 1,
-                 mesh=None):
+                 mesh=None,
+                 telemetry: Optional[Telemetry] = None):
         if not model.supports_paged_decode():
             raise ValueError(f"{model.cfg.name}: paged decode unsupported "
                              "(needs a scanned all-attention stack)")
@@ -216,22 +231,27 @@ class ServeEngine:
         self._admit_seq: Dict[int, int] = {}      # slot -> admission order
         self._admit_counter = 0
         self.finished: List[Request] = []
-        self.n_engine_steps = 0          # step() calls that found work
-        self.n_decode_steps = 0
-        self.n_prefill_chunks = 0        # per-row chunks ingested
-        self.n_prefill_dispatches = 0    # prefill program launches
-        self.n_replay_steps = 0
-        # dispatch accounting: n_total_dispatches counts EVERY program
-        # launch (prefill, decode/verify, replay, fused); a fused
-        # launch also increments the prefill + decode counters it
-        # subsumes, so fused-off arithmetic (total = prefill + decode +
-        # replay) loses exactly n_fused_dispatches when fusion is on
-        self.n_fused_dispatches = 0
-        self.n_total_dispatches = 0
-        # speculation stats (accept rate = n_draft_accepted / n_drafted)
-        self.n_spec_rounds = 0
-        self.n_drafted = 0
-        self.n_draft_accepted = 0
+        # counters live in the shared MetricsRegistry (telemetry.py);
+        # the legacy attribute names (engine.n_decode_steps, ...) are
+        # read-only properties over them via @expose_counters, so every
+        # existing consumer keeps working.  Of note:
+        # * n_engine_steps — step() calls that found work;
+        # * n_prefill_chunks / n_prefill_dispatches — per-row chunks
+        #   ingested vs prefill program launches;
+        # * dispatch accounting — n_total_dispatches counts EVERY
+        #   program launch (prefill, decode/verify, replay, fused); a
+        #   fused launch also increments the prefill + decode counters
+        #   it subsumes, so fused-off arithmetic (total = prefill +
+        #   decode + replay) loses exactly n_fused_dispatches when
+        #   fusion is on — the identity MetricsRegistry.audit rechecks;
+        # * speculation — accept rate = n_draft_accepted / n_drafted.
+        self.tel = telemetry if telemetry is not None else Telemetry()
+        self.uid = next_uid("e")
+        self._c = {n: self.tel.registry.counter(
+            n, component="engine", replica=self.uid)
+            for n in _ENGINE_COUNTERS}
+        self._now = 0.0              # last sanitized step clock
+        self._last_decode_rows = 0   # rows in the last decode round
 
     # --------------------------------------------------------- frontend
     def check_admissible(self, req: Request) -> None:
@@ -256,6 +276,8 @@ class ServeEngine:
         """Queue a request (see ``check_admissible`` for rejection)."""
         self.check_admissible(req)
         self.waiting.append(req)
+        if self.tel:
+            self.tel.request_submitted(req, t=req.arrival)
 
     @property
     def n_inflight(self) -> int:
@@ -321,7 +343,10 @@ class ServeEngine:
         prompt donated to the prefix trie stay resident (a
         cancel-then-resubmit re-shares them).  Tokens already streamed
         were confirmed and stay valid.  True if the rid was live."""
-        return self.extract(rid) is not None
+        req = self.extract(rid)
+        if req is not None and self.tel:
+            self.tel.event(req, "cancelled", t=self._now)
+        return req is not None
 
     # --------------------------------------------------------- internals
     def _free_slot_id(self) -> Optional[int]:
@@ -338,6 +363,9 @@ class ServeEngine:
             self.drafter.detach(slot)
         req.finish_time = now
         self.finished.append(req)
+        if self.tel:
+            self.tel.event(req, "finished", t=self._now,
+                           n_generated=len(req.generated))
 
     def _evict_slot(self, slot: int) -> Request:
         """Release ``slot`` (prefilling or decoding): drop its page
@@ -367,6 +395,10 @@ class ServeEngine:
         req = self._evict_slot(slot)
         req.n_preemptions += 1
         self.waiting.appendleft(req)
+        if self.tel:
+            self.tel.event(req, "preempted", t=self._now,
+                           replica=self.uid, source="pages",
+                           n_generated=len(req.generated))
         return slot
 
     def _defers_for_sharing(self, req: Request) -> bool:
@@ -441,6 +473,10 @@ class ServeEngine:
         self.prefilling[slot] = req
         self._admit_seq[slot] = self._admit_counter
         self._admit_counter += 1
+        if self.tel:
+            self.tel.event(req, "admitted", t=self._now,
+                           replica=self.uid, slot=slot,
+                           shared_tokens=shared)
         return True
 
     def _bucket_pages(self, n_needed: int) -> int:
@@ -509,9 +545,9 @@ class ServeEngine:
                                  jax.numpy.asarray(valids))
         self.cache.k_pages = state["k_pages"]
         self.cache.v_pages = state["v_pages"]
-        self.n_prefill_dispatches += 1
-        self.n_prefill_chunks += len(metas)
-        self.n_total_dispatches += 1
+        self._c["n_prefill_dispatches"].inc()
+        self._c["n_prefill_chunks"].inc(len(metas))
+        self._c["n_total_dispatches"].inc()
         self._finish_prefill(metas, np.asarray(tok), now)
 
     def _finish_prefill(self, metas, tok, now: float) -> None:
@@ -524,6 +560,10 @@ class ServeEngine:
         for _, slot, req, valid in metas:
             req.prefill_pos += valid
             self.cache.lengths[slot] = req.prefill_pos
+            if self.tel:
+                self.tel.event(req, "chunk_prefilled", t=self._now,
+                               replica=self.uid, n_tokens=int(valid),
+                               pos=req.prefill_pos)
         for r, slot, req, valid in metas:
             if slot not in self.prefilling \
                     or self.prefilling[slot] is not req:
@@ -549,10 +589,24 @@ class ServeEngine:
                 # cross the prompt/generation numerics boundary of the
                 # oracle)
                 self._replay(slot, req.generated[:-1], now)
+                if self.tel:
+                    self.tel.event(req, "replayed", t=self._now,
+                                   replica=self.uid,
+                                   n=len(req.generated) - 1)
             else:
                 req.generated.append(int(tok[r, 0]))
+            if self.tel:
+                # a fresh first token is a new confirmation (n=1);
+                # re-promotion after preemption confirms nothing new
+                self.tel.event(req, "promoted", t=self._now,
+                               replica=self.uid,
+                               n=int(first_token))
             if req.ttft is None:
                 req.ttft = now - req.arrival
+                if req.ttft != float("inf"):
+                    self.tel.registry.histogram(
+                        "ttft", tenant=req.tenant,
+                        slo=req.slo_class).observe(req.ttft)
             if self._done(req):
                 self._finish(slot, now)
             # replay re-derives KV for tokens streamed before a
@@ -585,8 +639,8 @@ class ServeEngine:
             self.cache.k_pages = state["k_pages"]
             self.cache.v_pages = state["v_pages"]
             self.cache.lengths[slot] += 1
-            self.n_replay_steps += 1
-            self.n_total_dispatches += 1
+            self._c["n_replay_steps"].inc()
+            self._c["n_total_dispatches"].inc()
 
     def _done(self, req: Request) -> bool:
         return (len(req.generated) >= req.max_new_tokens
@@ -691,8 +745,9 @@ class ServeEngine:
         is the unified form: with no drafts it degenerates to appending
         row token 0 (a = 0, the eos truncation is a no-op on a single
         token), which is exactly the plain decode bank."""
-        self.n_decode_steps += 1
-        self.n_spec_rounds += any_draft
+        self._c["n_decode_steps"].inc()
+        self._c["n_spec_rounds"].inc(int(any_draft))
+        self._last_decode_rows = len(self.active)
         nxt = np.asarray(nxt)
         for slot in list(self.active):
             req = self.active[slot]
@@ -709,9 +764,14 @@ class ServeEngine:
                 appended = appended[:appended.index(self.eos_id) + 1]
             req.generated.extend(appended)
             self.cache.lengths[slot] += len(appended)
-            self.n_drafted += len(d)
+            self._c["n_drafted"].inc(len(d))
             # drafts past an accepted eos were never banked
-            self.n_draft_accepted += min(a, len(appended))
+            self._c["n_draft_accepted"].inc(min(a, len(appended)))
+            if self.tel:
+                self.tel.event(req, "decode_round", t=self._now,
+                               replica=self.uid, n=len(appended),
+                               drafted=len(d),
+                               accepted=min(a, len(appended)))
             if self.spec_k > 0:
                 self.cache.rollback_spec(slot)
             if self._done(req):
@@ -727,7 +787,7 @@ class ServeEngine:
                              jax.numpy.asarray(tokens))
         self.cache.k_pages = state["k_pages"]
         self.cache.v_pages = state["v_pages"]
-        self.n_total_dispatches += 1
+        self._c["n_total_dispatches"].inc()
         self._apply_decode(nxt, drafts, any_draft, now)
 
     def _fused_round(self, tokens, drafts, any_draft,
@@ -756,10 +816,10 @@ class ServeEngine:
         # one launch subsumes a prefill dispatch and a decode round:
         # both sub-counters advance (their per-kind semantics — chunks
         # ingested, rounds banked — are unchanged), total only once
-        self.n_fused_dispatches += 1
-        self.n_total_dispatches += 1
-        self.n_prefill_dispatches += 1
-        self.n_prefill_chunks += len(metas)
+        self._c["n_fused_dispatches"].inc()
+        self._c["n_total_dispatches"].inc()
+        self._c["n_prefill_dispatches"].inc()
+        self._c["n_prefill_chunks"].inc(len(metas))
         self._apply_decode(d_nxt, drafts, any_draft, now)
         self._finish_prefill(metas, np.asarray(p_nxt), now)
 
@@ -771,7 +831,50 @@ class ServeEngine:
         over every decoding slot — in the steady state (both kinds of
         work pending) a single fused dispatch covers all of it
         (``fused=True``, the default).  Returns True while any work
-        remains (queued or in flight)."""
+        remains (queued or in flight).
+
+        With tracing on, wraps ``_step`` to emit one step-timeline
+        record: dispatch kind, rows per group, page/COW/eviction
+        deltas, population sizes.  The sanitized clock ``_now``
+        substitutes the step index when driven offline (``now=inf``)
+        so span/timeline times stay finite."""
+        self._now = (float(now) if now != float("inf")
+                     else float(self.n_engine_steps))
+        if not self.tel:
+            return self._step(now)
+        pre = (self._c["n_prefill_dispatches"].value,
+               self._c["n_decode_steps"].value,
+               self._c["n_replay_steps"].value,
+               self._c["n_fused_dispatches"].value,
+               self._c["n_prefill_chunks"].value,
+               self.cache.n_cow, self.cache.n_prefix_evictions,
+               self.cache.n_shared_tokens)
+        self._last_decode_rows = 0
+        more = self._step(now)
+        d_pref, d_dec, d_rep, d_fus, d_chunks, d_cow, d_evict, d_shr = (
+            self._c["n_prefill_dispatches"].value - pre[0],
+            self._c["n_decode_steps"].value - pre[1],
+            self._c["n_replay_steps"].value - pre[2],
+            self._c["n_fused_dispatches"].value - pre[3],
+            self._c["n_prefill_chunks"].value - pre[4],
+            self.cache.n_cow - pre[5],
+            self.cache.n_prefix_evictions - pre[6],
+            self.cache.n_shared_tokens - pre[7])
+        kind = ("fused" if d_fus else
+                "+".join([k for k, v in (("prefill", d_pref),
+                                         ("decode", d_dec),
+                                         ("replay", d_rep)) if v])
+                or "idle")
+        self.tel.record(
+            "engine", t=self._now, replica=self.uid, kind=kind,
+            prefill_rows=d_chunks, decode_rows=self._last_decode_rows,
+            replay_steps=d_rep, pages_free=self.cache.free_pages,
+            cow=d_cow, prefix_evictions=d_evict, shared_tokens=d_shr,
+            waiting=len(self.waiting), prefilling=len(self.prefilling),
+            active=len(self.active), finished=len(self.finished))
+        return more
+
+    def _step(self, now: float) -> bool:
         # Admission + prefill.  Chunk pacing exists to stop LONG
         # prompts from stalling in-flight decode, so only mid-prompt
         # chunks yield the step: short prompts (<= chunk_size) admit,
@@ -786,7 +889,7 @@ class ServeEngine:
         # ramp, decode-only tail — take the standalone programs, so
         # they reproduce the unfused engine dispatch-for-dispatch.
         if self.n_inflight:
-            self.n_engine_steps += 1
+            self._c["n_engine_steps"].inc()
         while True:
             self._admit_burst(now)
             if not self.prefilling:
@@ -816,25 +919,16 @@ class ServeEngine:
         wall-clock on shared runners is noise, program launches are
         not), prefill co-ingestion occupancy, and cache reuse.
         ``prefill_rows_mean`` is the mean number of requests sharing a
-        prefill dispatch (1.0 == the serialized path)."""
-        return {
-            "n_engine_steps": self.n_engine_steps,
-            "n_decode_steps": self.n_decode_steps,
-            "n_prefill_chunks": self.n_prefill_chunks,
-            "n_prefill_dispatches": self.n_prefill_dispatches,
-            "n_fused_dispatches": self.n_fused_dispatches,
-            "n_total_dispatches": self.n_total_dispatches,
-            "prefill_rows_mean": (
-                self.n_prefill_chunks
-                / max(self.n_prefill_dispatches, 1)),
-            "n_replay_steps": self.n_replay_steps,
-            "n_spec_rounds": self.n_spec_rounds,
-            "n_drafted": self.n_drafted,
-            "n_draft_accepted": self.n_draft_accepted,
-            "n_shared_tokens": self.cache.n_shared_tokens,
-            "n_cow": self.cache.n_cow,
-            "n_prefix_evictions": self.cache.n_prefix_evictions,
-        }
+        prefill dispatch (1.0 == the serialized path).  The dict is the
+        compatibility view of the MetricsRegistry this engine's
+        counters live in; ratio fields (``prefill_rows_mean``,
+        ``accept_rate``) are derived by ``telemetry.merge_stats`` so a
+        single replica and a fleet aggregate agree on the formula."""
+        raw = {n: c.value for n, c in self._c.items()}
+        raw.update(n_shared_tokens=self.cache.n_shared_tokens,
+                   n_cow=self.cache.n_cow,
+                   n_prefix_evictions=self.cache.n_prefix_evictions)
+        return merge_stats([raw])
 
     # -------------------------------------------------------------- run
     def run(self, requests: List[Request], *,

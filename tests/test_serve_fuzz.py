@@ -74,9 +74,15 @@ def oracle(bundle):
 
 # ---------------------------------------------------------- the harness
 def drive_and_check(engine, trace, *, oracle=None, cancels=None,
-                    events=None, max_steps=2000):
+                    events=None, max_steps=2000, telemetry=None):
     """Drive ``engine`` through ``trace`` step by step and enforce the
     serve-conformance bar.  Returns {rid: np.ndarray(generated)}.
+
+    ``telemetry``: the stack's ``Telemetry`` (tracing on) — adds the
+    trace-exactness sweep to the bar: every request's span is
+    well-formed (``telemetry.check_spans``), span token/replay counts
+    reconcile with the request state and ``stats()`` counters, and the
+    metrics-registry dispatch-identity audit is clean.
 
     * ``engine`` is any ``ServeBackend`` — a single engine, a router,
       or an elastic controller (anything with a ``replicas`` list gets
@@ -118,6 +124,9 @@ def drive_and_check(engine, trace, *, oracle=None, cancels=None,
             break
     done = {r.rid: np.asarray(r.generated, np.int32)
             for r in engine.finished}
+    if telemetry is not None:
+        from repro.serve.telemetry import check_spans
+        check_spans(trace, cancelled=cancelled, backend=engine)
     if oracle is not None:
         for r in trace:
             want = oracle(r.prompt, r.max_new_tokens)
@@ -163,7 +172,10 @@ def _case(seed: int, cfg):
 
 
 def _fresh(reqs):
-    return [dataclasses.replace(r, generated=[]) for r in reqs]
+    # reset BOTH engine-filled lists: dataclasses.replace copies field
+    # references, so reusing a trace list would alias spans across arms
+    return [dataclasses.replace(r, generated=[], trace=[])
+            for r in reqs]
 
 
 @pytest.mark.parametrize("seed", range(N_CASES))

@@ -1,0 +1,345 @@
+"""Telemetry conformance: span exactness under chaos, migration
+attribution, the zero-cost-when-off guarantee, and the metrics
+registry's audit + compatibility view.
+
+The bar (ISSUE / docs/observability.md): with tracing ON, every
+request the chaos fuzzer produces carries a well-formed span (exactly
+one ``submitted``, exactly one terminal event, token-confirming events
+summing to the stream length) and the registry reconciles with the
+legacy ``stats()`` counters including the dispatch identity; with
+tracing OFF, token streams and dispatch counts are bitwise identical
+to the traced run and requests carry no span at all.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import (Request, RequestRouter, ServeEngine, Telemetry,
+                         check_spans, merge_stats)
+from repro.serve.frontend import ServeFrontend
+from repro.serve.scheduler import _ENGINE_COUNTERS
+from repro.serve.step import (ServePrograms, make_decode_step,
+                              make_prefill_step)
+from repro.serve.telemetry import MetricsRegistry, chrome_trace
+from test_serve_fuzz import MAX_LEN, _case, _fresh, drive_and_check
+
+REPO = Path(__file__).resolve().parent.parent
+TRACE_REPORT = REPO / "scripts" / "trace_report.py"
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    cfg = configs.get_smoke("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # ONE program bundle for the module (same compile-cache discipline
+    # as the fuzz module: knobs vary, the model does not)
+    return cfg, model, params, ServePrograms(model)
+
+
+@pytest.fixture(scope="module")
+def oracle(bundle):
+    cfg, model, params, _ = bundle
+    prefill = jax.jit(make_prefill_step(model, max_len=MAX_LEN))
+    decode = jax.jit(make_decode_step(model))
+    memo = {}
+
+    def run(prompt: np.ndarray, gen: int) -> np.ndarray:
+        key = (prompt.tobytes(), gen)
+        if key not in memo:
+            last, cache = prefill(params, {"tokens": prompt[None]})
+            tok = np.argmax(np.asarray(last), -1).astype(np.int32)[:,
+                                                                   None]
+            out = [tok]
+            tok = jax.numpy.asarray(tok)
+            for _ in range(gen - 1):
+                tok, cache = decode(params, cache, tok)
+                out.append(np.asarray(tok))
+            memo[key] = np.concatenate(out, axis=1)[0]
+        return memo[key]
+    return run
+
+
+# ---------------------------------------------- spans under the fuzzer
+@pytest.mark.parametrize("seed", range(6))
+def test_traced_fuzz_spans_reconcile_with_stats(bundle, oracle, seed):
+    """The chaos fuzzer with tracing on: full conformance bar PLUS the
+    telemetry sweep (``check_spans`` inside ``drive_and_check``), then
+    registry-vs-stats reconciliation on top."""
+    cfg, model, params, programs = bundle
+    reqs, knobs, cancels = _case(seed, cfg)
+    tel = Telemetry(trace=True, metrics_interval=4)
+    eng = ServeEngine(model, params, fused=True, programs=programs,
+                      telemetry=tel, **knobs)
+    drive_and_check(eng, _fresh(reqs), oracle=oracle, cancels=cancels,
+                    telemetry=tel)
+    st = eng.stats()
+    # the registry subsumes stats(): every legacy counter is one
+    # registry counter's value (single replica -> total == value)
+    for name in _ENGINE_COUNTERS:
+        assert tel.registry.total(name) == st[name], name
+    assert not tel.registry.audit()
+    # the step timeline covered every engine step, kinds from the
+    # closed dispatch vocabulary
+    engine_recs = [r for r in tel.records if r.get("component") ==
+                   "engine"]
+    assert len(engine_recs) == st["n_engine_steps"]
+    for r in engine_recs:
+        assert set(r["kind"].split("+")) <= \
+            {"prefill", "decode", "replay", "fused", "idle"}, r
+    # metrics_interval=4 embedded periodic snapshots
+    if len(engine_recs) >= 4:
+        assert any(r.get("type") == "metrics" for r in tel.records)
+    # finished requests recorded TTFT histograms
+    if eng.finished:
+        snap = tel.registry.snapshot()
+        assert any(k.startswith("ttft{") and k.endswith(".count")
+                   for k in snap)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_migration_spans_carry_src_and_dst(bundle, oracle, seed):
+    """Elastic-churn arm with tracing on: every router migration shows
+    up as exactly one ``migrated`` span event with src != dst (and
+    ``check_spans`` pins that the next admission lands on dst)."""
+    cfg, model, params, programs = bundle
+    reqs, knobs, cancels = _case(seed, cfg)
+    tel = Telemetry(trace=True)
+
+    def mk():
+        return ServeEngine(model, params, fused=True,
+                           programs=programs, telemetry=tel, **knobs)
+
+    router = RequestRouter([mk(), mk()], policy="prefix",
+                           telemetry=tel)
+    rng = np.random.default_rng(2000 + seed)
+    events = {}
+    for t in rng.choice(np.arange(1, 14),
+                        size=int(rng.integers(2, 5)), replace=False):
+        def churn(r, _rng=rng):
+            live = [i for i in range(len(r.replicas))
+                    if not r.is_draining(i)]
+            grow = len(r.replicas) < 4 and (len(live) < 2
+                                            or _rng.random() < 0.5)
+            if grow:
+                r.add_replica(mk())
+            elif len(live) > 1:
+                r.drain(int(_rng.choice(live)))
+        events.setdefault(int(t), []).append(churn)
+    trace = _fresh(reqs)
+    drive_and_check(router, trace, oracle=oracle, cancels=cancels,
+                    events=events, telemetry=tel)
+    st = router.stats()
+    migrated = [e for r in trace for e in r.trace
+                if e.kind == "migrated"]
+    assert len(migrated) == st["n_migrations"]
+    for e in migrated:
+        assert e.attrs["src"] != e.attrs["dst"], e
+    # fleet-wide reconciliation across join/retire churn: summed
+    # registry counters equal the aggregated (live + departed) stats
+    for name in ("n_total_dispatches", "n_decode_steps",
+                 "n_replay_steps", "n_engine_steps"):
+        assert tel.registry.total(name) == st[name], name
+    assert not tel.registry.audit()
+    # the router timeline saw the churn
+    kinds = {r["kind"] for r in tel.records
+             if r.get("component") == "router"}
+    assert "join" in kinds or "retire" in kinds or "route" in kinds
+
+
+@pytest.mark.parametrize("seed", [2, 11])
+def test_tracing_off_is_bitwise_free(bundle, seed):
+    """The zero-cost-when-off contract: the untraced run produces
+    bitwise-identical token streams, the exact same dispatch counters
+    (zero extra dispatches), and no span events at all."""
+    cfg, model, params, programs = bundle
+    reqs, knobs, cancels = _case(seed, cfg)
+    runs = {}
+    for trace_on in (False, True):
+        tel = Telemetry(trace=trace_on)
+        eng = ServeEngine(model, params, fused=True, programs=programs,
+                          telemetry=tel, **knobs)
+        r = _fresh(reqs)
+        done = drive_and_check(eng, r, cancels=cancels,
+                               telemetry=tel if trace_on else None)
+        runs[trace_on] = (done, eng.stats(), r)
+    done_off, st_off, reqs_off = runs[False]
+    done_on, st_on, _ = runs[True]
+    assert set(done_off) == set(done_on)
+    for rid in done_off:
+        np.testing.assert_array_equal(done_off[rid], done_on[rid])
+    assert st_off == st_on                 # incl. n_total_dispatches
+    for r in reqs_off:
+        assert r.trace == []               # off-arm: no spans anywhere
+
+
+# ------------------------------------------------------------ frontend
+def test_frontend_spans_slo_preemption_and_tenant_tokens(bundle):
+    cfg, model, params, programs = bundle
+    rng = np.random.default_rng(9)
+    tel = Telemetry(trace=True)
+    eng = ServeEngine(model, params, fused=True, programs=programs,
+                      telemetry=tel, max_batch=2, page_size=8,
+                      n_pages=30, max_pages_per_seq=8, chunk_size=8,
+                      prefill_batch=2, spec_k=0)
+    fe = ServeFrontend(eng)
+    assert fe.tel is tel                   # inherited from the backend
+
+    def prompt(n):
+        return rng.integers(0, cfg.vocab_size, size=(n,)).astype(
+            np.int32)
+
+    bulk = [fe.submit(prompt(6), 6, tenant="free") for _ in range(2)]
+    for _ in range(3):
+        fe.pump()
+    # slots are full of batch work -> the interactive arrival preempts
+    vip = fe.submit(prompt(5), 4, tenant="gold",
+                    slo_class="interactive")
+    fe.drain()
+    reqs = [s.req for s in bulk] + [vip.req]
+    check_spans(reqs, backend=eng)
+    preempts = [e for r in reqs for e in r.trace
+                if e.kind == "preempted" and
+                (e.attrs or {}).get("source") == "slo"]
+    assert len(preempts) == fe.n_slo_preemptions >= 1
+    want = {}
+    for r in reqs:
+        want[r.tenant] = want.get(r.tenant, 0) + len(r.generated)
+    assert fe.tenant_tokens == want
+    # the front-end's submitted event is the span opener even though
+    # the engine re-submits underneath (dedup'd single 'submitted')
+    for r in reqs:
+        assert [e.kind for e in r.trace].count("submitted") == 1
+
+
+# ----------------------------------------------------- registry + merge
+def test_merge_stats_rederives_ratios():
+    a = {"n_drafted": 8, "n_draft_accepted": 8, "accept_rate": 1.0,
+         "n_prefill_chunks": 4, "n_prefill_dispatches": 2,
+         "prefill_rows_mean": 2.0, "n_decode_steps": 5}
+    b = {"n_drafted": 2, "n_draft_accepted": 0, "accept_rate": 0.0,
+         "n_prefill_chunks": 1, "n_prefill_dispatches": 1,
+         "prefill_rows_mean": 1.0, "n_decode_steps": 3}
+    m = merge_stats([a, b])
+    assert m["n_decode_steps"] == 8
+    assert m["accept_rate"] == 0.8         # 8/10, not mean(1.0, 0.0)
+    assert m["prefill_rows_mean"] == 5 / 3
+    # empty and missing-denominator cases stay finite
+    assert merge_stats([])["accept_rate"] == 0.0
+
+
+def test_registry_audit_catches_identity_violation():
+    reg = MetricsRegistry()
+    lbl = dict(component="engine", replica="x0")
+    reg.counter("n_prefill_dispatches", **lbl).inc(3)
+    reg.counter("n_decode_steps", **lbl).inc(5)
+    reg.counter("n_replay_steps", **lbl).inc(1)
+    reg.counter("n_fused_dispatches", **lbl).inc(2)
+    reg.counter("n_total_dispatches", **lbl).inc(7)   # 3+5+1-2
+    assert reg.audit() == []
+    reg.counter("n_total_dispatches", **lbl).inc()    # break it
+    errs = reg.audit()
+    assert errs and "n_total_dispatches" in errs[0]
+    # a traced stack trips the self-audit on the next step record
+    tel = Telemetry(trace=True, registry=reg)
+    with pytest.raises(RuntimeError, match="self-audit"):
+        tel.record("engine", t=0.0)
+
+
+def test_registry_labels_types_and_snapshot():
+    reg = MetricsRegistry()
+    c = reg.counter("hits", tenant="a")
+    assert reg.counter("hits", tenant="a") is c      # get-or-create
+    c.inc(3)
+    reg.counter("hits", tenant="b").inc(1)
+    assert reg.total("hits") == 4
+    reg.gauge("depth").set(2.5)
+    h = reg.histogram("lat", slo="interactive")
+    for v in (1.0, 9.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["hits{tenant=a}"] == 3
+    assert snap["depth"] == 2.5
+    assert snap["lat{slo=interactive}.count"] == 2
+    assert snap["lat{slo=interactive}.p99"] == 9.0
+    with pytest.raises(TypeError):
+        reg.gauge("hits", tenant="a")      # name+labels type collision
+
+
+# ----------------------------------------- export + trace_report CLI
+def _tiny_trace(tmp_path) -> Path:
+    """A hand-built two-request trace exercising every report table."""
+    tel = Telemetry(trace=True)
+    r0 = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                 max_new_tokens=2, tenant="gold",
+                 slo_class="interactive")
+    tel.request_submitted(r0, t=0.0)
+    tel.event(r0, "admitted", t=1.0, replica="e0", slot=0)
+    tel.event(r0, "promoted", t=2.0, replica="e0", n=1)
+    tel.event(r0, "decode_round", t=3.0, replica="e0", n=1,
+              drafted=2, accepted=1)
+    tel.event(r0, "finished", t=3.0, n_generated=2)
+    r0.generated.extend([5, 7])
+    r1 = Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                 max_new_tokens=4)
+    tel.request_submitted(r1, t=0.0)
+    tel.event(r1, "admitted", t=1.0, replica="e0", slot=1)
+    tel.event(r1, "migrated", t=2.0, src="e0", dst="e1",
+              n_generated=0)
+    tel.event(r1, "admitted", t=2.0, replica="e1", slot=0)
+    tel.event(r1, "cancelled", t=4.0)
+    tel.record("engine", t=1.0, replica="e0", kind="prefill")
+    tel.record("engine", t=3.0, replica="e0", kind="decode")
+    p = tmp_path / "trace.jsonl"
+    tel.write_jsonl(str(p))
+    return p
+
+
+def test_jsonl_and_chrome_export_shape(bundle, tmp_path):
+    p = _tiny_trace(tmp_path)
+    lines = [json.loads(ln) for ln in p.read_text().splitlines()]
+    assert lines[0]["type"] == "meta" and lines[0]["clock"] == "steps"
+    spans = [ln for ln in lines if ln["type"] == "span"]
+    assert [s["rid"] for s in spans] == [0, 1]
+    assert spans[0]["tenant"] == "gold" and spans[0]["generated"] == 2
+    assert lines[-1]["type"] == "metrics" and lines[-1]["final"]
+    trace = chrome_trace(lines)
+    phases = [e["ph"] for e in trace["traceEvents"]]
+    assert phases.count("b") == 2 and phases.count("e") == 2
+    assert phases.count("X") == 2          # one slice per step record
+    names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "n"}
+    assert {"submitted", "migrated", "finished"} <= names
+
+
+def test_trace_report_cli(tmp_path):
+    p = _tiny_trace(tmp_path)
+    chrome = tmp_path / "trace.chrome.json"
+    out = subprocess.run(
+        [sys.executable, str(TRACE_REPORT), str(p), "--validate",
+         "--chrome", str(chrome)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "validate: OK" in out.stdout
+    assert "gold" in out.stdout and "interactive" in out.stdout
+    assert "migrations (1)" in out.stdout
+    assert "accept_rate=0.500" in out.stdout
+    assert json.loads(chrome.read_text())["traceEvents"]
+    # schema violations exit nonzero
+    bad = tmp_path / "bad.jsonl"
+    lines = p.read_text().splitlines()
+    sp = json.loads(lines[1])
+    sp["events"][0]["kind"] = "warped"     # not an EVENT_KIND
+    bad.write_text("\n".join([lines[0], json.dumps(sp)] + lines[2:])
+                   + "\n")
+    out = subprocess.run(
+        [sys.executable, str(TRACE_REPORT), str(bad), "--validate"],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "warped" in out.stderr
