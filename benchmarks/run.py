@@ -22,9 +22,9 @@ import time
 from .common import Skip, save
 from . import (fig11_util, fig13_traffic, fig15_energy, fig19_sparse,
                fig22_simd, fig23_scaling, kernel_dataflow, roofline,
-               serve_elastic, serve_fused, serve_prefill, serve_prefix,
-               serve_router, serve_slo, serve_spec, serve_throughput,
-               table5_cisc, table6_static)
+               serve_elastic, serve_faults, serve_fused, serve_prefill,
+               serve_prefix, serve_router, serve_slo, serve_spec,
+               serve_throughput, table5_cisc, table6_static)
 
 BENCHES = {
     "table5": table5_cisc.run,
@@ -44,6 +44,7 @@ BENCHES = {
     "serve_router": serve_router.run,
     "serve_slo": serve_slo.run,
     "serve_elastic": serve_elastic.run,
+    "serve_faults": serve_faults.run,
     "fig23": fig23_scaling.run,
 }
 

@@ -1,0 +1,220 @@
+"""Fault-tolerant serving: a faulted fleet vs a fault-free fleet on
+identical traces.
+
+The robustness claim (docs/robustness.md) is that losing a replica
+costs *recompute*, never *correctness*: a crashed replica's requests
+are rebuilt from the router-side recovery journal at their
+confirmed-token frontier, replayed on survivors, and the elastic
+controller repairs the fleet back to its replica floor.  This
+benchmark runs the same trace through two arms with identical
+per-replica resources:
+
+* **clean** — an ``ElasticController`` over two replicas, no faults:
+  the PR-9-identical baseline (its counters double as the
+  untouched-run reference).
+* **faulted** — the same fleet, but one replica carries a scripted
+  **crash** mid-decode and the other a short **stall** (below the
+  watchdog's patience, so it heals invisibly).  The crash loses live
+  requests; the journal rebuilds them; the repair loop replaces the
+  dead replica.
+
+Every gate is a deterministic counter identity (synthetic step clock;
+wall time never gates):
+
+* ``complete_ok`` — zero dropped or duplicated streams in both arms
+  (every rid finishes exactly once),
+* ``parity_ok``   — every finished stream in BOTH arms is bitwise-equal
+  to ``greedy_generate``: a crash moves a stream, never changes it,
+* ``faults_ok``   — the faulted arm saw >= 1 failure, recovered >= 1
+  request and replayed >= 1 confirmed token; the clean arm saw none,
+* ``replay_ok``   — recovery replay is bounded by the journal frontier:
+  replayed tokens never exceed what the recovered streams had
+  confirmed (and the fleet's ``n_replay_steps`` accounts for them),
+* ``repaired_ok`` — the repair loop restored the fleet to its replica
+  floor (>= 1 repair, not degraded at drain).
+
+    PYTHONPATH=src python -m benchmarks.serve_faults [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import (ElasticController, ElasticPolicy,
+                         FaultInjector, Request, RequestRouter,
+                         ServeEngine, ServePrograms, greedy_generate)
+from repro.serve.kv_cache import pages_needed
+
+from .common import (fmt_table, metrics_snapshot, save,
+                     warm_serve_arms)
+
+ARCH = "qwen3-0.6b"
+PAGE, BATCH, CHUNK = 8, 4, 16
+PREFIX_LEN, UNIQUE_LEN = 24, 8
+SHORT_GEN, LONG_GEN = 4, 12
+CRASH_AT = 6           # crash mid-decode: lost requests carry tokens
+STALL_AT, STALL_FOR = 12, 3   # < stall_patience (8): heals invisibly
+
+
+def _trace(cfg, n: int, seed: int = 0):
+    """Shared-prefix requests with ragged arrivals over 8 steps; every
+    fourth request is a long generation (in flight when the crash
+    lands)."""
+    rng = np.random.default_rng(seed)
+
+    def walk(length):
+        base = rng.integers(0, cfg.vocab_size)
+        drift = rng.integers(0, 17, size=length)
+        return ((base + np.cumsum(drift)) % cfg.vocab_size).astype(np.int32)
+
+    prefix = walk(PREFIX_LEN)
+    return [Request(rid=i,
+                    prompt=np.concatenate([prefix, walk(UNIQUE_LEN)]),
+                    max_new_tokens=LONG_GEN if i % 4 == 3 else SHORT_GEN,
+                    arrival=float(i % 8))
+            for i in range(n)]
+
+
+def _engine(model, params, programs, n_pages):
+    return ServeEngine(model, params, max_batch=BATCH, n_pages=n_pages,
+                       page_size=PAGE, chunk_size=CHUNK,
+                       max_pages_per_seq=pages_needed(
+                           PREFIX_LEN + UNIQUE_LEN + LONG_GEN, PAGE),
+                       spec_k=0, programs=programs)
+
+
+def _fleet(mk, *, faulted: bool):
+    """Two replicas + repair factory; the faulted arm wraps them in
+    scripted ``FaultInjector``s (same engines, same resources)."""
+    a, b = mk(), mk()
+    if faulted:
+        a = FaultInjector(a, crash_at=CRASH_AT)
+        b = FaultInjector(b, stall_at=STALL_AT, stall_for=STALL_FOR)
+    router = RequestRouter([a, b], policy="least-loaded")
+    return ElasticController(router, mk, policy=ElasticPolicy(
+        min_replicas=2, max_replicas=2, scale_interval=64,
+        repair_backoff=1))
+
+
+def _drive(front, reqs):
+    for r in reqs:
+        front.submit(r)
+    t = 0
+    while True:
+        more = front.step(now=float(t))
+        t += 1
+        assert t < 5000, "fleet failed to drain the trace"
+        if not more and t > max(r.arrival for r in reqs):
+            break
+    return front.stats()
+
+
+def _oracle_streams(model, params, reqs):
+    want = {}
+    for gen in (SHORT_GEN, LONG_GEN):
+        group = [r for r in reqs if r.max_new_tokens == gen]
+        toks = np.stack([r.prompt for r in group])
+        out = np.asarray(greedy_generate(
+            model, params, {"tokens": toks}, gen,
+            toks.shape[1] + gen))
+        for r, row in zip(group, out):
+            want[r.rid] = row
+    return want
+
+
+def _check(reqs, finished, want):
+    rids = [r.rid for r in finished]
+    complete = sorted(rids) == sorted(r.rid for r in reqs)
+    parity = complete and all(
+        np.array_equal(np.asarray(r.generated, np.int32), want[r.rid])
+        for r in finished)
+    return complete, parity
+
+
+def run(smoke: bool = False) -> dict:
+    n_reqs = 10 if smoke else 20
+    cfg = configs.get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    seq_pages = pages_needed(PREFIX_LEN + UNIQUE_LEN + LONG_GEN, PAGE)
+    n_pages = 2 + BATCH * (seq_pages + 1) + pages_needed(PREFIX_LEN, PAGE)
+    programs = ServePrograms(model)
+
+    def mk():
+        return _engine(model, params, programs, n_pages)
+
+    warm_serve_arms([mk()], lambda: _trace(cfg, 4, seed=99))
+    reqs = _trace(cfg, n_reqs)
+    want = _oracle_streams(model, params, reqs)
+
+    clean = _fleet(mk, faulted=False)
+    st_clean = _drive(clean, _trace(cfg, n_reqs))
+    clean_ok, clean_parity = _check(reqs, clean.finished, want)
+
+    faulted = _fleet(mk, faulted=True)
+    st_fault = _drive(faulted, reqs)
+    fault_ok, fault_parity = _check(reqs, faulted.finished, want)
+
+    # replay bounded by the journal frontier: a recovered stream never
+    # replays more than it had confirmed when its replica died (the
+    # final stream length upper-bounds the frontier), and the fleet's
+    # replay counter accounts for every recovery replay step
+    recovered = [r for r in faulted.finished
+                 if r.rid in faulted.router.failed_rids]
+    replayed = int(st_fault["n_recovery_replayed_tokens"])
+    frontier_bound = sum(len(r.generated) for r in recovered)
+    replay_ok = (0 < replayed <= frontier_bound
+                 and st_fault["n_replay_steps"] >= replayed)
+
+    faults_ok = (st_fault["n_failures"] >= 1
+                 and st_fault["n_recovered_requests"] >= 1
+                 and st_clean["n_failures"] == 0
+                 and st_clean["n_recovered_requests"] == 0)
+    repaired_ok = (st_fault["n_repairs"] >= 1
+                   and not faulted.degraded
+                   and len(faulted.replicas) == 2)
+
+    rows = []
+    for name, st in (("clean", st_clean), ("faulted", st_fault)):
+        rows.append({
+            "arm": name,
+            "failures": int(st["n_failures"]),
+            "recovered": int(st["n_recovered_requests"]),
+            "replayed_toks": int(st["n_recovery_replayed_tokens"]),
+            "repairs": int(st["n_repairs"]),
+            "replica_steps": int(st["n_engine_steps"]),
+            "dispatches": int(st["n_total_dispatches"])})
+    print(f"\n== Fault-tolerant serving: {n_reqs} reqs, crash@"
+          f"{CRASH_AT} + stall@{STALL_AT}x{STALL_FOR}, "
+          f"{n_pages} pages/replica ==")
+    print(fmt_table(rows, ["arm", "failures", "recovered",
+                           "replayed_toks", "repairs", "replica_steps",
+                           "dispatches"]))
+    print(f"recovered {len(recovered)} streams, replayed {replayed} "
+          f"confirmed tokens (bound {frontier_bound}); parity "
+          f"clean={clean_parity} faulted={fault_parity}")
+    out = {"rows": rows,
+           "n_failures": int(st_fault["n_failures"]),
+           "n_recovered_requests": int(st_fault["n_recovered_requests"]),
+           "n_recovery_replayed_tokens": replayed,
+           "n_repairs": int(st_fault["n_repairs"]),
+           "recovery_overhead_steps": int(st_fault["n_engine_steps"])
+           - int(st_clean["n_engine_steps"]),
+           "complete_ok": clean_ok and fault_ok,
+           "parity_ok": clean_parity and fault_parity,
+           "faults_ok": faults_ok,
+           "replay_ok": replay_ok,
+           "repaired_ok": repaired_ok,
+           "metrics_snapshot": metrics_snapshot(faulted)}
+    save("serve_faults", out)
+    return out
+
+
+if __name__ == "__main__":
+    out = run(smoke="--smoke" in sys.argv[1:])
+    gates = [v for v in out.values() if isinstance(v, bool)]
+    raise SystemExit(0 if all(gates) else 1)

@@ -80,6 +80,13 @@ def validate(lines, tel) -> list:
                 if not isinstance(e.get("t"), (int, float)):
                     errs.append(f"line {i}: rid {ln.get('rid')} event "
                                 "missing numeric t")
+            if kinds == ["shed"]:
+                # a shed span is a rejected submit: the lone marker,
+                # no admission, no terminal, nothing generated
+                if ln.get("generated", 0) != 0:
+                    errs.append(f"line {i}: rid {ln.get('rid')} shed "
+                                "span reports generated tokens")
+                continue
             if kinds and kinds[0] != "submitted":
                 errs.append(f"line {i}: rid {ln.get('rid')} span does "
                             "not open with 'submitted'")
@@ -88,6 +95,11 @@ def validate(lines, tel) -> list:
                           or kinds[-1] not in tel.TERMINAL_KINDS):
                 errs.append(f"line {i}: rid {ln.get('rid')} has "
                             f"{len(terms)} terminal events")
+            if kinds.count("failed") != kinds.count("recovered"):
+                errs.append(f"line {i}: rid {ln.get('rid')} has "
+                            f"{kinds.count('failed')} failed but "
+                            f"{kinds.count('recovered')} recovered "
+                            "events")
             ntok = sum(e.get("n", 0) for e in evs
                        if e.get("kind") in ("decode_round", "promoted"))
             if "generated" in ln and ntok != ln["generated"]:
@@ -113,7 +125,8 @@ def report(lines, tel, out=sys.stdout):
     qdelay = defaultdict(list)    # (tenant, slo) -> [admit delay, ...]
     drafted = accepted = 0
     migrations = []
-    n_finished = n_cancelled = 0
+    failures = []                 # (rid, replica, reason, confirmed)
+    n_finished = n_cancelled = n_shed = 0
     for sp in spans:
         evs = sp.get("events", [])
         key = (sp.get("tenant", "default"), sp.get("slo", "batch"))
@@ -136,6 +149,14 @@ def report(lines, tel, out=sys.stdout):
                 migrations.append((sp["rid"], e.get("src", "?"),
                                    e.get("dst", "?"),
                                    e.get("n_generated", 0)))
+            elif e["kind"] == "failed":
+                failures.append([sp["rid"], e.get("replica", "?"),
+                                 e.get("reason", "?"), 0])
+            elif e["kind"] == "recovered" and failures \
+                    and failures[-1][0] == sp["rid"]:
+                failures[-1][3] = e.get("n_confirmed", 0)
+            elif e["kind"] == "shed":
+                n_shed += 1
             elif e["kind"] == "finished":
                 n_finished += 1
             elif e["kind"] == "cancelled":
@@ -179,6 +200,16 @@ def report(lines, tel, out=sys.stdout):
         for rid, src, dst, n in migrations:
             w(f"  {rid:>5} {src:<6} {dst:<6} {n:>14}\n")
 
+    if failures:
+        w(f"\nfailures/recoveries ({len(failures)}):\n")
+        w(f"  {'rid':>5} {'replica':<8} {'reason':<8} "
+          f"{'confirmed_toks':>14}\n")
+        for rid, rep, why, n in failures:
+            w(f"  {rid:>5} {rep:<8} {why:<8} {n:>14}\n")
+    if n_shed:
+        w(f"\nshed: {n_shed} submits rejected under degraded "
+          "capacity\n")
+
     final = next((ln for ln in reversed(lines)
                   if ln.get("type") == "metrics"), None)
     if final:
@@ -186,7 +217,11 @@ def report(lines, tel, out=sys.stdout):
         picks = sorted(k for k in vals
                        if k.startswith(("n_total_dispatches",
                                         "n_migrations",
-                                        "n_replicas_peak")))
+                                        "n_replicas_peak",
+                                        "n_failures",
+                                        "n_recovered_requests",
+                                        "n_recovery_replayed_tokens",
+                                        "n_repairs", "n_shed")))
         if picks:
             w("\nfinal metrics: ")
             w(", ".join(f"{k}={vals[k]:g}" for k in picks))

@@ -1,9 +1,15 @@
 from .backend import ServeBackend, StreamEvent  # noqa: F401
 from .elastic import ElasticController, ElasticPolicy  # noqa: F401
-from .frontend import ServeFrontend, TenantPolicy, TokenStream  # noqa: F401
+from .faults import (  # noqa: F401
+    FaultInjector, ReplicaFailure, parse_fault_spec,
+)
+from .frontend import (  # noqa: F401
+    ServeFrontend, ShedRejection, TenantPolicy, TokenStream,
+)
 from .kv_cache import PagedKVCache  # noqa: F401
 from .options import ServeOptions  # noqa: F401
 from .prefix import PrefixCache  # noqa: F401
+from .recovery import RequestJournal  # noqa: F401
 from .router import RequestRouter  # noqa: F401
 from .scheduler import (  # noqa: F401
     SLO_CLASSES, Request, ServeEngine, default_bucket_edges,

@@ -36,6 +36,19 @@ parallel through PRs 1–5, made identical on purpose:
   ``n_inflight < capacity`` owns all queueing policy itself (the
   backend's internal queue stays empty except for its own
   page-pressure preemptions).
+
+**Failure semantics.**  A backend that has *died* raises
+``repro.serve.faults.ReplicaFailure`` from every call that needs the
+process — ``step``, ``submit``, ``extract``, ``cancel``,
+``drain_events`` — while ``stats()`` (externally scraped counters)
+stays readable.  Layers composing backends must treat ReplicaFailure
+as "this replica is gone", not as a request error: the router marks
+the replica FAILED and rebuilds its requests from the recovery
+journal (serve/recovery.py, docs/robustness.md).  Two optional
+surfaces ride the protocol: ``degraded`` (bool — lost capacity not
+yet rebuilt; front-ends shed batch-class admissions while it is
+True) and ``mark_dead()`` (point of no return for a wrapper that can
+simulate death).  Absent attributes mean healthy/no-op.
 """
 from __future__ import annotations
 

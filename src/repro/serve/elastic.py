@@ -79,6 +79,14 @@ class ElasticPolicy:
     target_load: float = 1.0     # demand per slot a replica should carry
     scale_down_patience: int = 2  # low rounds before draining one
     alpha: float = 0.5           # demand-EMA smoothing (scale-down only)
+    # crash repair (docs/robustness.md): while the fleet sits below
+    # min_replicas the controller tries to replace lost replicas via
+    # replica_factory — a failed build waits out an exponentially
+    # growing backoff (repair_backoff, 2x per consecutive failure, in
+    # steps) and spends one unit of the bounded retry budget; a
+    # successful join resets both.  Budget exhausted = stay degraded.
+    repair_backoff: int = 2
+    repair_budget: int = 8
 
     def __post_init__(self):
         if not 1 <= self.min_replicas <= self.max_replicas:
@@ -89,9 +97,14 @@ class ElasticPolicy:
             raise ValueError("scale_interval must be >= 1")
         if self.target_load <= 0:
             raise ValueError("target_load must be > 0")
+        if self.repair_backoff < 1:
+            raise ValueError("repair_backoff must be >= 1")
+        if self.repair_budget < 0:
+            raise ValueError("repair_budget must be >= 0")
 
 
-@expose_counters("n_scale_ups", "n_scale_downs")
+@expose_counters("n_scale_ups", "n_scale_downs", "n_repairs",
+                 "n_repair_failures")
 class ElasticController:
     """A ``ServeBackend`` that owns a router and resizes its fleet.
 
@@ -116,6 +129,11 @@ class ElasticController:
         self._tick = 0
         self._ema: Optional[float] = None
         self._low_rounds = 0
+        # repair loop state: next tick allowed to attempt a rebuild,
+        # current backoff delay, remaining retry budget
+        self._repair_at = 0
+        self._repair_delay = self.policy.repair_backoff
+        self._repair_budget = self.policy.repair_budget
         # counters in the fleet's shared registry (legacy names via
         # @expose_counters); the controller shares the router's
         # Telemetry — one registry per serving stack
@@ -123,7 +141,8 @@ class ElasticController:
         self.uid = next_uid("c")
         self._c = {n: self.tel.registry.counter(
             n, component="elastic", replica=self.uid)
-            for n in ("n_scale_ups", "n_scale_downs")}
+            for n in ("n_scale_ups", "n_scale_downs", "n_repairs",
+                      "n_repair_failures")}
 
     # -------------------------------------------------------- delegation
     @property
@@ -200,7 +219,19 @@ class ElasticController:
         # EMA.  All missing replicas join this round.
         up = self._target(demand)
         for _ in range(max(0, up - live)):
-            self.router.add_replica(self.factory())
+            try:
+                eng = self.factory()
+            except Exception as e:
+                # a broken factory must not kill the serve loop; the
+                # next control round (or the backoff-gated repair
+                # loop, if the fleet is degraded) retries
+                self._c["n_repair_failures"].inc()
+                if self.tel:
+                    self.tel.record("elastic", t=self.router._last_now,
+                                    kind="scale_up_failed",
+                                    error=type(e).__name__)
+                break
+            self.router.add_replica(eng)
             self._c["n_scale_ups"].inc()
         live = self.router.n_live
         # scale down on the smoothed signal (never below instant: a
@@ -225,14 +256,55 @@ class ElasticController:
                 target_up=up, live=self.router.n_live,
                 draining=len(self.router._draining))
 
+    # ------------------------------------------------------------ repair
+    @property
+    def degraded(self) -> bool:
+        """True while the fleet sits below ``min_replicas`` — lost
+        capacity the repair loop has not yet rebuilt.  Front-ends use
+        this to shed batch-class admissions (docs/robustness.md)."""
+        return self.router.n_live < self.policy.min_replicas
+
+    def _maybe_repair(self, now: float) -> None:
+        """Replace crash-lost replicas.  Runs every step (a control
+        round only every ``scale_interval`` — too slow for a dead
+        fleet), gated by exponential backoff and the bounded retry
+        budget so a persistently failing factory cannot hot-loop."""
+        if not self.degraded:
+            return
+        if self._repair_budget <= 0 or self._tick < self._repair_at:
+            return
+        try:
+            eng = self.factory()
+        except Exception as e:
+            self._c["n_repair_failures"].inc()
+            self._repair_budget -= 1
+            self._repair_at = self._tick + self._repair_delay
+            self._repair_delay *= 2
+            if self.tel:
+                self.tel.record(
+                    "elastic", t=self.router._last_now,
+                    kind="repair_failed", error=type(e).__name__,
+                    budget=self._repair_budget,
+                    next_in=self._repair_at - self._tick)
+            return
+        self.router.add_replica(eng)
+        self._c["n_repairs"].inc()
+        self._repair_delay = self.policy.repair_backoff
+        self._repair_budget = self.policy.repair_budget
+        if self.tel:
+            self.tel.record("elastic", t=self.router._last_now,
+                            kind="repair", live=self.router.n_live)
+
     # -------------------------------------------------------------- step
     def step(self, now: float = float("inf")) -> bool:
         """One fleet iteration: run the control loop every
-        ``scale_interval``-th call, then one router step (which
-        executes any drain the control round just marked).  Returns
+        ``scale_interval``-th call, repair crash losses, then one
+        router step (which executes any drain the control round just
+        marked, and detects/recovers any replica failure).  Returns
         True while anything is queued or in flight."""
         if self._tick % self.policy.scale_interval == 0:
             self._control(now)
+        self._maybe_repair(now)
         self._tick += 1
         return self.router.step(now)
 
@@ -243,6 +315,8 @@ class ElasticController:
         agg = self.router.stats()
         agg["n_scale_ups"] = self.n_scale_ups
         agg["n_scale_downs"] = self.n_scale_downs
+        agg["n_repairs"] = self.n_repairs
+        agg["n_repair_failures"] = self.n_repair_failures
         agg["n_control_rounds"] = (self._tick
                                    + self.policy.scale_interval - 1) \
             // self.policy.scale_interval

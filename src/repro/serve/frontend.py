@@ -67,7 +67,25 @@ from .backend import ServeBackend, StreamEvent
 from .scheduler import Request, SLO_CLASSES
 from .telemetry import (Counter, Telemetry, expose_counters, next_uid)
 
-__all__ = ["ServeFrontend", "TokenStream", "TenantPolicy"]
+__all__ = ["ServeFrontend", "TokenStream", "TenantPolicy",
+           "ShedRejection"]
+
+
+class ShedRejection(RuntimeError):
+    """Typed admission rejection under degraded capacity: the backend
+    reports ``degraded`` (fleet below its replica floor after crash
+    losses) and the request is batch-class, so it is refused at submit
+    instead of queueing unboundedly behind capacity that may not come
+    back.  Interactive traffic keeps flowing.  The caller can retry
+    later; nothing was enqueued."""
+
+    def __init__(self, req: Request):
+        self.rid = req.rid
+        self.tenant = req.tenant
+        self.slo_class = req.slo_class
+        super().__init__(
+            f"request {req.rid} (tenant {req.tenant!r}, "
+            f"{req.slo_class}) shed: serving capacity degraded")
 
 
 @dataclasses.dataclass
@@ -172,7 +190,7 @@ class TokenStream:
             await self._wakeup.wait()
 
 
-@expose_counters("n_slo_preemptions", "n_cancelled")
+@expose_counters("n_slo_preemptions", "n_cancelled", "n_shed")
 class ServeFrontend:
     def __init__(self, backend: ServeBackend, *,
                  tenants: Optional[Dict[str, TenantPolicy]] = None,
@@ -210,7 +228,7 @@ class ServeFrontend:
         self.uid = next_uid("f")
         self._c = {n: self.tel.registry.counter(
             n, component="frontend", replica=self.uid)
-            for n in ("n_slo_preemptions", "n_cancelled")}
+            for n in ("n_slo_preemptions", "n_cancelled", "n_shed")}
         self._tt: Dict[str, Counter] = {}
 
     @property
@@ -260,6 +278,17 @@ class ServeFrontend:
                              f"choose from {SLO_CLASSES}")
         if req.rid in self._streams:
             raise ValueError(f"rid {req.rid} already has a live stream")
+        # graceful degradation: while the backend reports lost
+        # capacity, refuse batch-class work at the door with a typed
+        # rejection rather than queueing unboundedly — interactive
+        # traffic keeps flowing on the survivors (docs/robustness.md)
+        if req.slo_class == "batch" \
+                and getattr(self.backend, "degraded", False):
+            self._c["n_shed"].inc()
+            if self.tel:
+                self.tel.event(req, "shed", t=self.clock,
+                               tenant=req.tenant)
+            raise ShedRejection(req)
         self.backend.check_admissible(req)
         self.policy(req.tenant)              # materialize + validate
         stream = TokenStream(self, req)
@@ -478,6 +507,7 @@ class ServeFrontend:
             "n_completed": float(len(self.completed)),
             "n_cancelled": float(self.n_cancelled),
             "n_slo_preemptions": float(self.n_slo_preemptions),
+            "n_shed": float(self.n_shed),
             **{f"tenant_tokens[{t}]": float(n)
                for t, n in sorted(self.tenant_tokens.items())},
         }

@@ -63,6 +63,16 @@ class ServeOptions:
     min_replicas: int = 1
     max_replicas: int = 0
     scale_interval: int = 8
+    # fault tolerance (docs/robustness.md): watchdog deadline for the
+    # router's stall detection, repair-loop knobs for the elastic
+    # controller, and an optional scripted fault-injection plan
+    # ("<replica>:<crash|stall>@<step>[x<rounds>]", comma-separated)
+    # that wraps the initial replicas in FaultInjectors — the chaos
+    # quickstart's entry point
+    stall_patience: int = 8
+    repair_backoff: int = 2
+    repair_budget: int = 8
+    fault_spec: str = ""
     # front-end
     stream: bool = False
     tenant_weights: Dict[str, float] = dataclasses.field(
@@ -136,6 +146,28 @@ class ServeOptions:
         ap.add_argument("--scale-interval", type=int, default=8,
                         help="engine steps between elastic control "
                              "rounds")
+        ap.add_argument("--stall-patience", type=int, default=8,
+                        help="router watchdog: stepped rounds a "
+                             "replica may hold work without a single "
+                             "dispatch before it is declared FAILED "
+                             "and its requests recovered from the "
+                             "journal")
+        ap.add_argument("--repair-backoff", type=int, default=2,
+                        help="elastic repair loop: base backoff (in "
+                             "steps, doubling per consecutive factory "
+                             "failure) between attempts to rebuild a "
+                             "crash-lost replica")
+        ap.add_argument("--repair-budget", type=int, default=8,
+                        help="elastic repair loop: consecutive failed "
+                             "rebuild attempts tolerated before the "
+                             "fleet stays degraded")
+        ap.add_argument("--chaos-faults", type=str, default="",
+                        help="scripted fault injection, e.g. "
+                             "'0:crash@12,1:stall@8x5' — wrap replica "
+                             "<i> in a FaultInjector that crashes at "
+                             "its step <n> (or stalls for <rounds>); "
+                             "recovery keeps streams token-exact "
+                             "(docs/robustness.md)")
         ap.add_argument("--router-policy", type=str, default="prefix",
                         choices=list(ROUTER_POLICIES),
                         help="replica selection: prefix affinity "
@@ -184,6 +216,10 @@ class ServeOptions:
             min_replicas=getattr(args, "min_replicas", 1),
             max_replicas=getattr(args, "max_replicas", 0),
             scale_interval=getattr(args, "scale_interval", 8),
+            stall_patience=getattr(args, "stall_patience", 8),
+            repair_backoff=getattr(args, "repair_backoff", 2),
+            repair_budget=getattr(args, "repair_budget", 8),
+            fault_spec=getattr(args, "chaos_faults", ""),
             stream=getattr(args, "stream", False),
             tenant_weights=_parse_weights(
                 getattr(args, "tenant_weights", "")),
@@ -276,6 +312,22 @@ class ServeOptions:
                 programs=programs,
                 telemetry=tel)
 
+        def wrap_faults(engines):
+            # scripted chaos: wrap the targeted initial replicas in
+            # FaultInjectors (replicas joined later by the elastic
+            # controller are always healthy builds)
+            if not self.fault_spec:
+                return engines
+            from .faults import FaultInjector, parse_fault_spec
+            engines = list(engines)
+            for idx, kw in parse_fault_spec(self.fault_spec):
+                if not 0 <= idx < len(engines):
+                    raise ValueError(
+                        f"--chaos-faults targets replica {idx}; fleet "
+                        f"starts with {len(engines)}")
+                engines[idx] = FaultInjector(engines[idx], **kw)
+            return engines
+
         if self.max_replicas > 0:
             # elastic fleet: start at the floor, let demand grow it.
             # Every replica the controller ever builds comes from the
@@ -285,16 +337,22 @@ class ServeOptions:
             policy = ElasticPolicy(
                 min_replicas=lo,
                 max_replicas=max(lo, self.max_replicas),
-                scale_interval=self.scale_interval)
-            router = RequestRouter([mk() for _ in range(lo)],
-                                   policy=self.router_policy,
-                                   telemetry=tel)
+                scale_interval=self.scale_interval,
+                repair_backoff=self.repair_backoff,
+                repair_budget=self.repair_budget)
+            router = RequestRouter(
+                wrap_faults([mk() for _ in range(lo)]),
+                policy=self.router_policy,
+                stall_patience=self.stall_patience,
+                telemetry=tel)
             return ElasticController(router, mk, policy=policy)
         if self.replicas > 1:
-            return RequestRouter([mk() for _ in range(self.replicas)],
-                                 policy=self.router_policy,
-                                 telemetry=tel)
-        return mk()
+            return RequestRouter(
+                wrap_faults([mk() for _ in range(self.replicas)]),
+                policy=self.router_policy,
+                stall_patience=self.stall_patience,
+                telemetry=tel)
+        return wrap_faults([mk()])[0]
 
     def build_frontend(self, model, params, *, smoke: bool = False,
                        programs=None, slo_aware: bool = True,

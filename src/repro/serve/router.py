@@ -56,6 +56,19 @@ router's completion log, and its undrained stream events are held for
 the next ``drain_events``.  The demand-driven control loop that
 decides *when* to scale lives one layer up (serve/elastic.py).
 
+**Failure.**  DRAINING is cooperative; FAILED is not.  A replica
+whose ``step`` raises :class:`~repro.serve.faults.ReplicaFailure`, or
+that misses the stall watchdog's progress deadline
+(``stall_patience`` stepped rounds holding work without a single
+dispatch), is declared FAILED: nothing can be extracted from it.  Its
+requests are rebuilt from the router-side ``RequestJournal``
+(serve/recovery.py) at their journal-confirmed token frontier and
+re-admitted at the queue head on survivors — the same recompute-replay
+path migration uses, so recovered streams stay bitwise-exact — and its
+counters fold through the departed-stats accumulator exactly like a
+graceful retirement, so the fleet dispatch identities survive the
+crash.  See docs/robustness.md.
+
 **Why the aggregate scales.**  The router's throughput story is the
 TPU-paper memory argument one level up: a single replica's page pool
 bounds how many distinct hot prefixes stay resident — a workload
@@ -80,6 +93,8 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .backend import StreamEvent
+from .faults import ReplicaFailure
+from .recovery import RequestJournal
 from .scheduler import Request, ServeEngine
 from .telemetry import (Telemetry, expose_counters, merge_stats,
                         next_uid)
@@ -89,7 +104,9 @@ __all__ = ["RequestRouter", "ROUTER_POLICIES"]
 ROUTER_POLICIES = ("prefix", "least-loaded", "round-robin")
 
 _ROUTER_COUNTERS = ("n_joined", "n_departed", "n_migrations",
-                    "n_migrated_tokens", "n_affinity_hits")
+                    "n_migrated_tokens", "n_affinity_hits",
+                    "n_failures", "n_recovered_requests",
+                    "n_recovery_replayed_tokens")
 
 
 @expose_counters(*_ROUTER_COUNTERS)
@@ -98,6 +115,7 @@ class RequestRouter:
                  policy: str = "prefix",
                  max_inflight: Optional[int] = None,
                  affinity_record: int = 1024,
+                 stall_patience: int = 8,
                  telemetry: Optional[Telemetry] = None):
         if not replicas:
             raise ValueError("router needs at least one replica")
@@ -150,6 +168,20 @@ class RequestRouter:
         self.migrated_rids: set = set()
         self._migrating: Dict[int, str] = {}   # rid -> src engine uid
         self._last_now = 0.0
+        # crash recovery (serve/recovery.py + docs/robustness.md): the
+        # journal mirrors every dispatched request's confirmed-token
+        # frontier from the events the router drains each step, so a
+        # replica that dies without answering extract() can have its
+        # requests rebuilt router-side.  The watchdog declares a
+        # replica FAILED after stall_patience consecutive steps
+        # holding work without dispatching any.
+        if stall_patience < 1:
+            raise ValueError("stall_patience must be >= 1")
+        self.stall_patience = stall_patience
+        self._journal = RequestJournal()
+        self.failed_rids: set = set()          # rids ever recovered
+        # replica id -> (last n_total_dispatches seen, stuck rounds)
+        self._progress: Dict[int, Tuple[float, int]] = {}
         for eng in replicas:
             self.add_replica(eng)
 
@@ -179,7 +211,9 @@ class RequestRouter:
         return int(self._peak.value)
 
     def _index_of(self, replica: Union[int, ServeEngine]) -> int:
-        if isinstance(replica, ServeEngine):
+        # identity first: replicas may be wrapped backends (e.g. a
+        # FaultInjector), not literal ServeEngine instances
+        if not isinstance(replica, int):
             for i, e in enumerate(self.replicas):
                 if e is replica:
                     return i
@@ -221,25 +255,88 @@ class RequestRouter:
         eng = self.replicas[i]
         assert eng.n_inflight == 0, "removing a replica with live work"
         self._harvest(i)
-        self._pending_events.extend(eng.drain_events())
-        self._departed_stats = merge_stats([self._departed_stats,
-                                            eng.stats()])
+        self._absorb(eng)
+        self._drop_replica(i, eng.stats(), kind="retire")
+
+    def _drop_replica(self, i: int, st: Dict[str, float], *,
+                      kind: str, **fields) -> None:
+        """Shared fleet-exit bookkeeping (graceful retire AND crash):
+        fold the replica's counters into the departed-stats
+        accumulator — departure never un-counts work, so the dispatch
+        identity holds fleet-wide across any churn — and excise it
+        from every membership structure."""
+        eng = self.replicas[i]
+        self._departed_stats = merge_stats([self._departed_stats, st])
         self._departed_routed += self.n_dispatched[i]
         rid = self._ids[i]
         self._draining.discard(rid)
         self._recent.pop(rid)
         self._harvested.pop(rid)
+        self._progress.pop(rid, None)
         del self.replicas[i]
         del self._ids[i]
         del self.n_dispatched[i]
         self._c["n_departed"].inc()
         if self.tel:
-            self.tel.record("router", t=self._last_now, kind="retire",
+            self.tel.record("router", t=self._last_now, kind=kind,
                             replica=eng.uid,
-                            fleet=len(self.replicas))
+                            fleet=len(self.replicas), **fields)
         if self._rr > i:
             self._rr -= 1
         self._rr = self._rr % max(len(self.replicas), 1)
+
+    # -------------------------------------------------------- failure
+    def fail(self, replica: Union[int, ServeEngine],
+             reason: str = "killed") -> int:
+        """Declare a replica FAILED — the kill switch (chaos tests,
+        an external health checker).  Unlike ``drain`` nothing is
+        asked of the replica: its requests are rebuilt from the
+        recovery journal and re-admitted on survivors.  Returns the
+        number of requests recovered."""
+        return self._fail_replica(self._index_of(replica),
+                                  reason=reason)
+
+    def _fail_replica(self, i: int, *, reason: str) -> int:
+        """Handle a dead replica: mark its wrapper dead (a late
+        revival must not double-serve), fold whatever counters are
+        still scrapeable, drop it from the fleet, then reconstruct
+        its lost requests from the journal — truncated to the
+        confirmed-token frontier the router has already streamed —
+        and re-admit them at the head of the queue (oldest first,
+        like a drain's migration).  Re-admission rides the normal
+        recompute-replay path, so every recovered stream is bitwise
+        the stream an unfailed replica would have produced."""
+        eng = self.replicas[i]
+        sid = self._ids[i]
+        if hasattr(eng, "mark_dead"):
+            eng.mark_dead()
+        try:
+            self._harvest(i)         # finished work is already safe
+        except ReplicaFailure:
+            pass
+        try:
+            st = eng.stats()         # counters survive the process
+        except ReplicaFailure:
+            st = {}
+        lost = self._journal.lost(sid)
+        self._c["n_failures"].inc()
+        recovered: List[Request] = []
+        for entry in lost:
+            req, burden = RequestJournal.reconstruct(entry)
+            self._c["n_recovered_requests"].inc()
+            self._c["n_recovery_replayed_tokens"].inc(burden)
+            self.failed_rids.add(req.rid)
+            if self.tel:
+                self.tel.event(req, "failed", t=self._last_now,
+                               replica=eng.uid, reason=reason)
+                self.tel.event(req, "recovered", t=self._last_now,
+                               n_confirmed=entry.confirmed)
+            recovered.append(req)
+        self._drop_replica(i, st, kind="fail", reason=reason,
+                           lost=len(recovered))
+        # journal.lost returned oldest-first; head-insert preserves it
+        self.queue.extendleft(reversed(recovered))
+        return len(recovered)
 
     def _pump_drains(self) -> None:
         """Execute pending drains: migrate every request a draining
@@ -257,6 +354,7 @@ class RequestRouter:
             for r in reqs:
                 self._c["n_migrated_tokens"].inc(len(r.generated))
                 self.migrated_rids.add(r.rid)
+                self._journal.unassign(r.rid)
                 if self.tel:
                     # the "migrated" span event lands at re-dispatch,
                     # when the destination is known (see step)
@@ -280,6 +378,8 @@ class RequestRouter:
                 return
             except ValueError as e:
                 err = e
+            except ReplicaFailure:
+                continue      # dead replica, removed on the next step
         raise err or ValueError("no live replica to admit the request")
 
     def submit(self, req: Request) -> None:
@@ -310,17 +410,33 @@ class RequestRouter:
         self._harvest_all()
         return self.completed
 
+    def _absorb(self, eng) -> None:
+        """Pull ``eng``'s undrained stream events into the router's
+        buffer, advancing the recovery journal's confirmed-token
+        frontiers on the way past.  Called for every replica every
+        step, so an event the engine emitted is in router memory — and
+        journal-counted — before the next step can kill the replica."""
+        evs = eng.drain_events()
+        if evs:
+            self._journal.observe(evs)
+            self._pending_events.extend(evs)
+
     def drain_events(self) -> List[StreamEvent]:
-        """Confirmed-token events since the last drain, replica-major
-        (events held from departed replicas first).  Per-stream order
-        is exact (a request lives on one replica at a time);
-        cross-stream interleaving is already only step-granular on a
-        single engine, so replica-major order changes nothing a
+        """Confirmed-token events since the last drain.  The router
+        absorbs each replica's events every step (the journal must see
+        them — see ``_absorb``), so this mostly serves the buffer; a
+        final sweep catches events emitted outside ``step``.
+        Per-stream order is exact (a request lives on one replica at a
+        time); cross-stream interleaving is already only step-granular
+        on a single engine, so buffer order changes nothing a
         streaming consumer can observe."""
+        for eng in self.replicas:
+            try:
+                self._absorb(eng)
+            except ReplicaFailure:
+                pass          # detected and recovered on the next step
         ev: List[StreamEvent] = self._pending_events
         self._pending_events = []
-        for eng in self.replicas:
-            ev.extend(eng.drain_events())
         return ev
 
     def extract(self, rid: int) -> Optional[Request]:
@@ -331,10 +447,16 @@ class RequestRouter:
         for i, r in enumerate(self.queue):
             if r.rid == rid:
                 del self.queue[i]
+                self._journal.discard(rid)
                 return r
         for eng in self.replicas:
-            req = eng.extract(rid)
+            try:
+                req = eng.extract(rid)
+            except ReplicaFailure:
+                continue     # dead replica: its rids live in the queue
+                             # (recovered) or are gone — keep scanning
             if req is not None:
+                self._journal.discard(rid)
                 return req
         return None
 
@@ -391,7 +513,7 @@ class RequestRouter:
         try:
             self.replicas[i].check_admissible(req)
             return True
-        except ValueError:
+        except (ValueError, ReplicaFailure):
             return False
 
     def _pick(self, req: Request) -> Optional[int]:
@@ -416,6 +538,21 @@ class RequestRouter:
                 self._c["n_affinity_hits"].inc()
                 eligible = [i for i in eligible if aff[i] == best]
         return min(eligible, key=lambda i: (load[i], i))
+
+    # -------------------------------------------------------- watchdog
+    def _stalled(self, i: int) -> bool:
+        """Progress deadline: a replica that holds work and was just
+        stepped must dispatch *something* (a prefill chunk, a decode
+        round, a replay step).  ``stall_patience`` consecutive stepped
+        rounds with a frozen dispatch counter and live requests is a
+        wedged process — declare it failed.  Healthy replicas always
+        progress when stepped, so the watchdog never fires on them."""
+        eng, sid = self.replicas[i], self._ids[i]
+        total = eng.n_total_dispatches
+        last, stuck = self._progress.get(sid, (None, 0))
+        stuck = (stuck + 1 if total == last and eng.n_inflight else 0)
+        self._progress[sid] = (total, stuck)
+        return stuck >= self.stall_patience
 
     # --------------------------------------------------------- harvest
     def _harvest(self, i: int) -> None:
@@ -447,6 +584,7 @@ class RequestRouter:
                 break
             req = self.queue.popleft()
             self.replicas[i].submit(req)
+            self._journal.assign(req, self._ids[i])
             if self.tel:
                 src = self._migrating.pop(req.rid, None)
                 if src is not None:
@@ -457,11 +595,25 @@ class RequestRouter:
             self.n_dispatched[i] += 1
             n_routed += 1
         busy = False
+        failed: List[Tuple[int, str]] = []
         for i, eng in enumerate(self.replicas):
             if eng.n_inflight:
-                eng.step(now)
+                try:
+                    eng.step(now)
+                except ReplicaFailure:
+                    failed.append((i, "crash"))
+                    continue
                 busy = True
-            self._harvest(i)
+                self._harvest(i)
+                self._absorb(eng)
+                if self._stalled(i):
+                    failed.append((i, "stall"))
+        # process failures AFTER the loop (indices shift on removal),
+        # highest index first so earlier indices stay valid
+        for i, why in sorted(failed, reverse=True):
+            self._fail_replica(i, reason=why)
+        if failed:
+            busy = True              # recovered work re-queued
         if self.tel and (busy or self.queue or drains or n_routed):
             self.tel.record(
                 "router", t=self._last_now, kind="route",
@@ -491,6 +643,10 @@ class RequestRouter:
         agg["n_migrated_tokens"] = self.n_migrated_tokens
         agg["n_routed"] = sum(self.n_dispatched) + self._departed_routed
         agg["n_affinity_hits"] = self.n_affinity_hits
+        agg["n_failures"] = self.n_failures
+        agg["n_recovered_requests"] = self.n_recovered_requests
+        agg["n_recovery_replayed_tokens"] = \
+            self.n_recovery_replayed_tokens
         return agg
 
     # -------------------------------------------------------------- run

@@ -46,9 +46,13 @@ from collections import OrderedDict
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 # Event kinds a request span may contain (the JSONL schema contract;
-# scripts/trace_report.py --validate enforces it).
+# scripts/trace_report.py --validate enforces it).  ``failed`` marks a
+# request lost to a replica crash/stall, ``recovered`` its journal
+# reconstruction (re-admission then rides the normal replay path), and
+# ``shed`` a typed admission rejection under degraded capacity.
 EVENT_KINDS = ("submitted", "admitted", "chunk_prefilled", "promoted",
                "decode_round", "preempted", "replayed", "migrated",
+               "failed", "recovered", "shed",
                "cancelled", "finished")
 TERMINAL_KINDS = ("finished", "cancelled")
 
@@ -65,6 +69,12 @@ RATIO_FIELDS: Dict[str, Tuple[str, str]] = {
 #   n_total = n_prefill + n_decode + n_replay - n_fused
 _IDENTITY = ("n_total_dispatches", "n_prefill_dispatches",
              "n_decode_steps", "n_replay_steps", "n_fused_dispatches")
+
+# Crash-recovery counters (see docs/robustness.md): recovery implies
+# failure, and replay burden implies recovered requests — audit()
+# checks the implication chain wherever these are registered.
+_RECOVERY = ("n_failures", "n_recovered_requests",
+             "n_recovery_replayed_tokens")
 
 _uid_counters: Dict[str, "itertools.count[int]"] = {}
 
@@ -206,10 +216,26 @@ class MetricsRegistry:
         list of violation strings (empty = healthy)."""
         groups: Dict[Tuple[Tuple[str, str], ...],
                      Dict[str, float]] = {}
+        rec_groups: Dict[Tuple[Tuple[str, str], ...],
+                         Dict[str, float]] = {}
         for (name, labels), m in self._metrics.items():
             if name in _IDENTITY:
                 groups.setdefault(labels, {})[name] = m.value
+            elif name in _RECOVERY:
+                rec_groups.setdefault(labels, {})[name] = m.value
         errs = []
+        for labels, vals in rec_groups.items():
+            if vals.get("n_recovered_requests", 0) \
+                    and not vals.get("n_failures", 0):
+                errs.append(f"{dict(labels)}: n_recovered_requests="
+                            f"{vals['n_recovered_requests']} with "
+                            "n_failures=0")
+            if vals.get("n_recovery_replayed_tokens", 0) \
+                    and not vals.get("n_recovered_requests", 0):
+                errs.append(f"{dict(labels)}: "
+                            "n_recovery_replayed_tokens="
+                            f"{vals['n_recovery_replayed_tokens']} "
+                            "with n_recovered_requests=0")
         fleet = {k: 0.0 for k in _IDENTITY}
         for labels, vals in groups.items():
             for k in _IDENTITY:
@@ -400,9 +426,12 @@ def check_spans(reqs, *, cancelled: Iterable[int] = (),
     * every span starts with exactly one ``submitted`` and ends with
       exactly one terminal event matching the request's fate;
     * confirmed-token events sum to ``len(generated)`` exactly;
-    * admissions reconcile with preemptions + migrations;
+    * admissions reconcile with preemptions + migrations +
+      crash recoveries (each ``recovered`` pairs with a ``failed``);
     * ``migrated`` events carry ``src != dst`` and the next admission
       lands on ``dst``;
+    * a ``shed`` span is a rejected submit: nothing before or after
+      the shed marker, and the request generated nothing;
     * against ``backend`` (optional): finished events == finished
       list, replayed tokens == ``n_replay_steps``, and the registry
       audit is clean.
@@ -412,6 +441,11 @@ def check_spans(reqs, *, cancelled: Iterable[int] = (),
         evs = list(r.trace)
         assert evs, f"rid {r.rid}: traced request has no span events"
         kinds = [e.kind for e in evs]
+        if "shed" in kinds:
+            # shed at submit: the request never entered the stack
+            assert kinds == ["shed"], (r.rid, kinds)
+            assert len(r.generated) == 0, (r.rid, r.generated)
+            continue
         assert kinds[0] == "submitted", (r.rid, kinds)
         assert kinds.count("submitted") == 1, (r.rid, kinds)
         terms = [k for k in kinds if k in TERMINAL_KINDS]
@@ -431,9 +465,14 @@ def check_spans(reqs, *, cancelled: Iterable[int] = (),
         n_adm = kinds.count("admitted")
         n_pre = kinds.count("preempted")
         n_mig = kinds.count("migrated")
+        n_fail = kinds.count("failed")
+        n_rec = kinds.count("recovered")
+        # every reconstruction answers exactly one loss (a request can
+        # crash more than once, but never recovers without failing)
+        assert n_fail == n_rec, (r.rid, n_fail, n_rec, kinds)
         if want_term == "finished":
-            assert 1 <= n_adm <= 1 + n_pre + n_mig, \
-                (r.rid, n_adm, n_pre, n_mig)
+            assert 1 <= n_adm <= 1 + n_pre + n_mig + n_rec, \
+                (r.rid, n_adm, n_pre, n_mig, n_rec)
         replay_total += sum((e.attrs or {}).get("n", 0) for e in evs
                             if e.kind == "replayed")
         finish_events += kinds.count("finished")

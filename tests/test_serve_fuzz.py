@@ -216,6 +216,54 @@ def test_fuzz_tp2_matches_oracle(bundle, oracle, seed):
 
 
 @pytest.mark.parametrize("seed", range(6))
+def test_fuzz_fault_recovery_matches_oracle(bundle, oracle, seed):
+    """The fault arm: the same chaos traces, served by a fleet where
+    one replica carries a seeded scripted fault (crash or stall, drawn
+    by ``FaultInjector.seeded``) and a seeded kill-switch event hard-
+    fails a live replica mid-trace (``RequestRouter.fail`` — the
+    external-health-checker analog, so every case sees >=1 failure
+    even if the scripted fault lands on an idle replica).  Lost
+    requests are rebuilt from the recovery journal and replayed on
+    survivors, and the bar is the FULL conformance bar — allocator
+    invariants every step, bitwise oracle parity, exact cancels,
+    span-trace exactness (telemetry sweep), and the fleet dispatch
+    identity after the crash-folds."""
+    from repro.serve import FaultInjector, RequestRouter
+    from repro.serve.telemetry import Telemetry
+    cfg, model, params, programs = bundle
+    reqs, knobs, cancels = _case(seed, cfg)
+    tel = Telemetry(trace=True)
+
+    def mk():
+        return ServeEngine(model, params, fused=True,
+                           programs=programs, telemetry=tel, **knobs)
+
+    faulty = FaultInjector.seeded(mk(), seed, horizon=10)
+    router = RequestRouter([faulty, mk(), mk()], policy="prefix",
+                           stall_patience=3, telemetry=tel)
+    rng = np.random.default_rng(3000 + seed)
+
+    def kill(r, _rng=rng):
+        live = [i for i in range(len(r.replicas))
+                if not r.is_draining(i)]
+        if len(live) > 1:
+            r.fail(live[int(_rng.integers(0, len(live)))])
+    # early enough that the trace is still live on every seed (the
+    # loop always reaches t=3 while work remains): the kill is
+    # guaranteed, the scripted fault is extra chaos on top
+    events = {int(rng.integers(1, 4)): [kill]}
+    drive_and_check(router, _fresh(reqs), oracle=oracle,
+                    cancels=cancels, events=events, telemetry=tel)
+    assert router.n_failures >= 1
+    assert len(router._journal) == 0      # every stream reached an end
+    st = router.stats()
+    assert st["n_total_dispatches"] == (
+        st["n_prefill_dispatches"] + st["n_decode_steps"]
+        + st["n_replay_steps"] - st["n_fused_dispatches"])
+    assert st["n_replay_steps"] >= router.n_recovery_replayed_tokens
+
+
+@pytest.mark.parametrize("seed", range(6))
 def test_fuzz_elastic_churn_matches_oracle(bundle, oracle, seed):
     """The elastic-churn arm: the same chaos traces, served by a
     router whose fleet is mutated MID-TRACE by seeded scale-up and
